@@ -1,0 +1,148 @@
+"""Roofline report: reads the dry-run JSONs and derives the three terms.
+
+    compute    = HLO_FLOPs_per_device / 197e12        (bf16 MXU peak, v5e)
+    memory     = HLO_bytes_per_device / 819e9         (HBM bandwidth)
+    collective = wire_bytes_per_device / 50e9         (ICI per-link)
+
+cost_analysis numbers come from the partitioned module, i.e. already
+per-device; wire bytes use ring-algorithm estimates per collective kind with
+while-loop trip multiplication (see launch/dryrun.py).
+
+MODEL_FLOPS: 6*N*D for train steps (2*N*D for forward-only serve steps),
+N = matmul-visible params (embedding gather excluded, head included),
+N_active for MoE.  The MODEL/HLO ratio flags remat & redundant compute.
+
+CPU-backend caveat recorded in EXPERIMENTS.md: XLA CPU legalizes some bf16
+ops to f32, so HLO bytes (and collective payloads shown as f32) are upper
+bounds - on TPU the bf16 payloads halve those terms.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--csv out.csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_BYTES = 16 * 2**30
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def _param_counts():
+    """N (matmul params) and N_active per arch, from the configs."""
+    import jax
+    from repro.configs import ARCH_IDS, get_config
+    from repro.models.transformer import init_params
+    out = {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(
+            lambda c=cfg: init_params(c, jax.random.PRNGKey(0)))
+        flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        total = active = 0
+        for path, leaf in flat:
+            keys = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            if keys == "embed":
+                continue           # gather, no matmul flops
+            total += n
+            if "moe/w_" in keys and "sh_" not in keys:
+                # routed experts: only top_k of num_experts active per token
+                active += n * cfg.top_k // max(cfg.num_experts, 1)
+            else:
+                active += n
+        out[arch] = {"n": total, "n_active": active}
+    return out
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def derive(cell: dict, counts: dict) -> dict:
+    from repro.configs import SHAPES
+    seq, batch, kind = SHAPES[cell["shape"]]
+    arch = cell["arch"]
+    n_chips = cell["n_chips"]
+    compute_s = cell["flops_per_device"] / PEAK_FLOPS
+    memory_s = cell.get("bytes_per_device_bf16",
+                        cell["bytes_per_device"]) / HBM_BW
+    wire = cell["collectives"].get("total_wire_bytes",
+                                   cell["collectives"]
+                                   .get("total_per_device_bytes", 0.0))
+    coll_s = wire / LINK_BW
+    tokens = batch * (seq if kind != "decode" else 1)
+    n = counts[arch]["n_active"]
+    factor = 6.0 if kind == "train" else 2.0
+    model_flops = factor * n * tokens / n_chips       # per device
+    ratio = model_flops / max(cell["flops_per_device"], 1.0)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # roofline fraction: useful-compute time over the bounding term
+    ideal_compute = model_flops / PEAK_FLOPS
+    frac = ideal_compute / bound if bound > 0 else 0.0
+    peak_mem = cell["memory"].get("peak_bytes", 0) or \
+        cell["memory"]["live_bytes_est"]
+    mesh_label = cell["mesh"] + ("+int8" if cell.get("int8_serving") else "")
+    return {
+        "arch": arch, "shape": cell["shape"], "mesh": mesh_label,
+        "chips": n_chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops_dev": model_flops,
+        "hlo_flops_dev": cell["flops_per_device"],
+        "model_hlo_ratio": ratio,
+        "roofline_frac": frac,
+        "peak_mem_gb": peak_mem / 2**30,
+        "fits_hbm": peak_mem <= HBM_BYTES,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--mesh", default=None,
+                    choices=[None, "single", "multi", "single+int8"])
+    args = ap.parse_args()
+    counts = _param_counts()
+    rows = [derive(c, counts) for c in load_cells()]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    hdr = (f"{'arch':18s} {'shape':12s} {'mesh':6s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'domin':>6s} "
+           f"{'MF/HF':>6s} {'roofl%':>7s} {'mem_GB':>7s} fits")
+    print(hdr)
+    for r in rows:
+        if args.mesh and r["mesh"] != args.mesh:
+            continue
+        print(f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+              f"{r['collective_s']:10.4f} {r['dominant'][:6]:>6s} "
+              f"{r['model_hlo_ratio']:6.2f} {100*r['roofline_frac']:7.1f} "
+              f"{r['peak_mem_gb']:7.2f} {'Y' if r['fits_hbm'] else 'N'}")
+    if args.csv:
+        import csv
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+        print(f"wrote {args.csv}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

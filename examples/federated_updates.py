@@ -1,0 +1,63 @@
+"""Federated / cross-pod update compression (the paper's §VI scenario).
+
+    PYTHONPATH=src python examples/federated_updates.py
+
+Simulates N workers computing local gradients; each worker RD-quantizes its
+update on the DeepCABAC grid with error feedback, and the server aggregates
+dequantized updates.  Reports the wire rate the CABAC coder achieves on the
+quantized update stream vs raw fp32, and shows training still converges.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarization as B
+from repro.core.cabac import RangeEncoder
+from repro.distributed.compress import (CompressionConfig,
+                                        ef_compress_update,
+                                        init_error_feedback)
+from repro.optim.adamw import _q8_encode
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n_workers, dim = 4, (64, 512)
+    target = jnp.asarray(rng.standard_normal(dim), jnp.float32)
+    params = {"w": jnp.zeros(dim, jnp.float32)}
+    efs = [init_error_feedback(params) for _ in range(n_workers)]
+    cfg = CompressionConfig(enabled=True)
+    lr = 0.1
+    wire_bits, raw_bits = 0.0, 0.0
+
+    for step in range(150):
+        agg = jnp.zeros(dim, jnp.float32)
+        for wkr in range(n_workers):
+            noise = 0.05 * jnp.asarray(
+                rng.standard_normal(dim), jnp.float32)
+            g = {"w": 2 * (params["w"] - target) + noise}
+            gq, efs[wkr] = ef_compress_update(g, efs[wkr], cfg)
+            agg = agg + gq["w"]
+            if step % 25 == 0 and wkr == 0:
+                codes, _ = _q8_encode(g["w"])
+                enc = RangeEncoder(B.make_contexts())
+                B.encode_levels(enc, np.asarray(codes,
+                                                np.int64).ravel()[:65536])
+                bits = 8 * len(enc.finish()) / 65536
+                wire_bits += bits
+                raw_bits += 32
+        params = {"w": params["w"] - lr * agg / n_workers}
+        if step % 25 == 0:
+            err = float(jnp.mean(jnp.square(params["w"] - target)))
+            print(f"step {step:3d}: mse={err:.2e}")
+
+    err = float(jnp.mean(jnp.square(params["w"] - target)))
+    n = wire_bits and raw_bits
+    print(f"final mse {err:.2e}; CABAC'd update stream: "
+          f"{wire_bits/(raw_bits/32):.2f} bits/param vs 32 fp32 "
+          f"(x{raw_bits/wire_bits:.1f} less inter-pod traffic)")
+    assert err < 1e-3
+
+
+if __name__ == "__main__":
+    main()

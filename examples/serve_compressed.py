@@ -1,0 +1,55 @@
+"""Serve a model from a DeepCABAC container with batched requests.
+
+    PYTHONPATH=src python examples/serve_compressed.py
+
+Trains briefly, writes the weights as a DeepCABAC container (the paper's
+deployment artifact), loads a ServeEngine from the container, and runs
+batched greedy generation — verifying the compressed engine emits the same
+tokens as the raw-weight engine.
+"""
+
+import numpy as np
+import jax
+
+from repro.checkpoint.manager import flatten_tree
+from repro.configs import get_smoke_config
+from repro.core.deepcabac import compress_dc_v2
+from repro.data.pipeline import make_batch
+from repro.models.transformer import init_params, train_loss
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    cfg = get_smoke_config("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ocfg = AdamWConfig(lr=2e-3)
+    state = adamw_init(params, ocfg)
+    step = jax.jit(lambda p, s, b: adamw_update(
+        jax.grad(train_loss)(p, b, cfg), s, p, ocfg))
+    print("training briefly ...")
+    for i in range(80):
+        params, state = step(params, state,
+                             make_batch(cfg, i, batch=16, seq=64))
+
+    flat = flatten_tree(params)
+    res = compress_dc_v2(flat, delta=1e-4, lam=0.0)
+    print(f"container: {len(res.blob)/1024:.1f} KiB "
+          f"({res.report['bits_per_param']:.2f} bits/param, "
+          f"x{100/res.report['ratio_pct']:.1f} vs fp32)")
+
+    raw = ServeEngine(cfg, params, max_len=96)
+    compressed = ServeEngine.from_compressed(cfg, res.blob, max_len=96)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (8, 16)).astype(np.int32)
+    out_raw = raw.generate(prompts, steps=24)
+    out_c = compressed.generate(prompts, steps=24)
+    match = np.mean(out_raw == out_c)
+    print(f"batched generation: {out_c.shape}; "
+          f"token agreement raw-vs-compressed = {match:.3f}")
+    assert match == 1.0, "near-lossless container must match greedy decode"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .manager import (CheckpointConfig, CheckpointManager,  # noqa: F401
+                      flatten_tree, unflatten_like)

@@ -1,0 +1,45 @@
+"""Assigned-architecture registry: ``get_config(arch_id)`` and
+``get_smoke_config(arch_id)`` plus shape/input-spec helpers."""
+
+from __future__ import annotations
+
+import importlib
+
+from ..models.config import ModelConfig
+
+ARCH_IDS = [
+    "llama3-8b", "qwen1.5-4b", "mistral-nemo-12b", "qwen3-8b",
+    "deepseek-v3-671b", "deepseek-moe-16b", "mamba2-2.7b",
+    "musicgen-medium", "qwen2-vl-7b", "zamba2-2.7b",
+]
+
+_MOD = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+# (seq_len, global_batch, kind);  kind: train | prefill | decode
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention (see DESIGN.md §5): only the
+# SSM/hybrid archs run it; pure full-attention archs skip.
+LONG_CTX_ARCHS = {"mamba2-2.7b", "zamba2-2.7b"}
+
+
+def shapes_for(arch: str) -> list[str]:
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_CTX_ARCHS:
+        out.append("long_500k")
+    return out
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{_MOD[arch]}", __name__)
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{_MOD[arch]}", __name__)
+    return mod.SMOKE

@@ -1,0 +1,10 @@
+# DeepCABAC core: CABAC engine, binarization, rate model, quantizers,
+# DC-v1/DC-v2 pipelines, baselines, container/codec.
+from .cabac import ContextSet, RangeDecoder, RangeEncoder  # noqa: F401
+from .codec import (QuantizedTensor, decode_state_dict,  # noqa: F401
+                    encode_state_dict)
+from .deepcabac import (CompressionResult, compress_dc_v1,  # noqa: F401
+                        compress_dc_v2, quantize_tensor_rd, search_dc_v1,
+                        search_dc_v2)
+from .quant import (nearest_level, rd_assign, uniform_quantize,  # noqa: F401
+                    weighted_lloyd)

@@ -1,0 +1,127 @@
+"""Tensor / pytree encode-decode API on top of the CABAC engine.
+
+This is the public surface used by checkpointing, the serving loader and the
+examples: quantized integer levels <-> chunk-parallel CABAC bitstreams packed
+into a DCBC container.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import binarization as B
+from .cabac import RangeDecoder, RangeEncoder
+from .container import ENC_CABAC, ENC_RAW, ContainerReader, ContainerWriter
+
+DEFAULT_CHUNK = 1 << 16
+
+
+def resolve_dtype(name: str) -> np.dtype:
+    """np.dtype that also understands ml_dtypes names (bfloat16, ...)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+@dataclass
+class QuantizedTensor:
+    """A tensor on the equidistant grid q = step * level."""
+
+    levels: np.ndarray            # int64, original shape
+    step: float
+    dtype: str = "float32"        # reconstruction dtype
+
+    def dequantize(self) -> np.ndarray:
+        return (self.levels.astype(np.float64) * self.step).astype(
+            resolve_dtype(self.dtype))
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.levels.shape)
+
+
+def encode_level_chunks(levels: np.ndarray, num_gr: int = B.DEFAULT_NUM_GR,
+                        chunk_size: int = DEFAULT_CHUNK) -> list[bytes]:
+    """Encode a flat level array as independently-decodable chunks."""
+    flat = np.asarray(levels).ravel()
+    chunks = []
+    for s in range(0, max(flat.size, 1), chunk_size):
+        blk = flat[s:s + chunk_size]
+        enc = RangeEncoder(B.make_contexts(num_gr))
+        B.encode_levels(enc, blk, num_gr)
+        chunks.append(enc.finish())
+    return chunks
+
+
+def decode_level_chunks(chunk_payloads: list[bytes], count: int,
+                        num_gr: int = B.DEFAULT_NUM_GR,
+                        chunk_size: int = DEFAULT_CHUNK) -> np.ndarray:
+    out = np.empty(count, dtype=np.int64)
+    pos = 0
+    for payload in chunk_payloads:
+        n = min(chunk_size, count - pos)
+        dec = RangeDecoder(payload, B.make_contexts(num_gr))
+        out[pos:pos + n] = B.decode_levels(dec, n, num_gr)
+        pos += n
+    assert pos == count, f"decoded {pos} of {count} values"
+    return out
+
+
+def encode_state_dict(entries: dict[str, QuantizedTensor | np.ndarray],
+                      num_gr: int = B.DEFAULT_NUM_GR,
+                      chunk_size: int = DEFAULT_CHUNK) -> bytes:
+    """Quantized tensors are CABAC-coded; raw ndarrays pass through verbatim
+    (biases / norm scales / step tables the pipeline chose not to quantize)."""
+    w = ContainerWriter()
+    for name, entry in entries.items():
+        if isinstance(entry, QuantizedTensor):
+            chunks = encode_level_chunks(entry.levels, num_gr, chunk_size)
+            w.add_cabac(name, entry.dtype, entry.shape, entry.step,
+                        num_gr, chunk_size, chunks)
+        else:
+            w.add_raw(name, np.asarray(entry))
+    return w.tobytes()
+
+
+def decode_state_dict(data: bytes, dequantize: bool = True
+                      ) -> dict[str, np.ndarray | QuantizedTensor]:
+    out: dict[str, np.ndarray | QuantizedTensor] = {}
+    for hdr, payload in ContainerReader(data):
+        if hdr.encoding == ENC_RAW:
+            out[hdr.name] = np.frombuffer(
+                payload, dtype=resolve_dtype(hdr.dtype)).reshape(
+                    hdr.shape).copy()
+        elif hdr.encoding == ENC_CABAC:
+            count = int(np.prod(hdr.shape)) if hdr.shape else 1
+            offs, chunks = 0, []
+            for ln in hdr.chunk_lens:
+                chunks.append(payload[offs:offs + ln])
+                offs += ln
+            levels = decode_level_chunks(
+                chunks, count, hdr.num_gr, hdr.chunk_size).reshape(hdr.shape)
+            qt = QuantizedTensor(levels=levels, step=hdr.step, dtype=hdr.dtype)
+            out[hdr.name] = qt.dequantize() if dequantize else qt
+        else:
+            raise ValueError(f"unknown encoding {hdr.encoding}")
+    return out
+
+
+def compressed_size_report(entries: dict[str, QuantizedTensor | np.ndarray],
+                           blob: bytes) -> dict[str, float]:
+    """Bits/param + ratio vs. the fp32 footprint (paper's 'Org. size')."""
+    n_params = 0
+    for e in entries.values():
+        n_params += int(np.prod(e.levels.shape if isinstance(
+            e, QuantizedTensor) else np.asarray(e).shape))
+    orig_bytes = 4 * n_params
+    return {
+        "params": float(n_params),
+        "orig_mb": orig_bytes / 2**20,
+        "compressed_mb": len(blob) / 2**20,
+        "ratio_pct": 100.0 * len(blob) / orig_bytes,
+        "bits_per_param": 8.0 * len(blob) / max(n_params, 1),
+    }

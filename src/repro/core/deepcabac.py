@@ -1,0 +1,206 @@
+"""DeepCABAC top-level pipelines: DC-v1 and DC-v2 (paper §III, Fig. 5).
+
+Pipeline per Fig. 5:  scan weights layer-by-layer (row-major) -> pick a
+hyperparameter beta = (Delta, lambda) -> RD-quantize (eq. 11) -> CABAC-code ->
+reconstruct & evaluate -> repeat over the hyperparameter grid until the
+desired accuracy-vs-size trade-off.
+
+DC-v1 (eq. 12): per-layer step size from sigma_min and w_max with global
+coarseness S; importance F_i = 1/sigma_i^2.
+DC-v2: global Delta grid (bracketed by a nearest-neighbour screening round),
+F_i = 1.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from . import binarization as B
+from .codec import QuantizedTensor, compressed_size_report, encode_state_dict
+from .quant import nearest_level, rd_assign
+from .rate_model import build_rate_table, estimate_bin_probs
+
+QUANT_MIN_NDIM = 2   # 1-D tensors (biases/norms) stay raw, as in the paper
+
+
+def dc_v1_step_size(w_max: float, sigma_min: float, s: float) -> float:
+    """Paper eq. (12): Delta = 2|w_max| / (2|w_max|/sigma_min + S)."""
+    w_max = abs(float(w_max))
+    if w_max == 0.0:
+        return 1.0
+    return 2.0 * w_max / (2.0 * w_max / max(sigma_min, 1e-12) + s)
+
+
+def quantize_tensor_rd(w: np.ndarray, step: float, lam: float,
+                       importance: np.ndarray | None = None,
+                       num_gr: int = B.DEFAULT_NUM_GR, window: int = 4,
+                       passes: int = 2,
+                       table_refinements: int = 1) -> QuantizedTensor:
+    """NN seed -> context statistics -> rate table -> RD assignment.
+
+    ``table_refinements``: after each RD pass the context statistics (and
+    hence the rate table) are re-estimated from the *assigned* levels —
+    at large lambda the assignment shifts the level distribution far from
+    the nearest-neighbour statistics the first table was built from, and
+    a stale table can make the actual coded rate non-monotone in lambda
+    (observed: +11 % bits at lambda=1e-2; one refinement removes it).
+    """
+    flat = np.asarray(w, dtype=np.float64).ravel()
+    nn = nearest_level(flat, step)
+    max_level = int(np.abs(nn).max()) + window + 1
+    fl = None if importance is None else np.asarray(importance).ravel()
+    levels = nn
+    for _ in range(1 + max(table_refinements, 0)):
+        table = build_rate_table(estimate_bin_probs(levels, num_gr),
+                                 max_level)
+        levels = rd_assign(flat, fl, step, lam, table, window=window,
+                           max_level=max_level, passes=passes)
+    return QuantizedTensor(levels=levels.reshape(np.asarray(w).shape),
+                           step=step, dtype=str(np.asarray(w).dtype))
+
+
+@dataclass
+class CompressionResult:
+    blob: bytes
+    report: dict
+    hyperparams: dict
+    quantized: dict = field(repr=False, default_factory=dict)
+
+    def reconstructed(self) -> dict[str, np.ndarray]:
+        out = {}
+        for k, v in self.quantized.items():
+            out[k] = v.dequantize() if isinstance(v, QuantizedTensor) else v
+        return out
+
+
+def _quantize_state_dict(params: dict[str, np.ndarray], step_for: Callable,
+                         lam: float, importance: dict | None,
+                         num_gr: int) -> dict:
+    entries: dict[str, QuantizedTensor | np.ndarray] = {}
+    for name, w in params.items():
+        w = np.asarray(w)
+        if w.ndim < QUANT_MIN_NDIM:
+            entries[name] = w
+            continue
+        fim = None if importance is None else np.asarray(importance[name])
+        entries[name] = quantize_tensor_rd(
+            w, step_for(name, w), lam, fim, num_gr=num_gr)
+    return entries
+
+
+def compress_dc_v2(params: dict[str, np.ndarray], delta: float, lam: float,
+                   num_gr: int = B.DEFAULT_NUM_GR) -> CompressionResult:
+    """One (Delta, lambda) point of DC-v2 (F_i = 1, global step)."""
+    entries = _quantize_state_dict(params, lambda n, w: delta, lam, None,
+                                   num_gr)
+    blob = encode_state_dict(entries, num_gr)
+    return CompressionResult(
+        blob=blob, report=compressed_size_report(entries, blob),
+        hyperparams={"method": "dc-v2", "delta": delta, "lam": lam},
+        quantized=entries)
+
+
+def compress_dc_v1(params: dict[str, np.ndarray], sigma: dict[str, np.ndarray],
+                   s: float, lam: float,
+                   num_gr: int = B.DEFAULT_NUM_GR) -> CompressionResult:
+    """One (S, lambda) point of DC-v1: per-layer Delta via eq. 12,
+    F_i = 1/sigma_i^2."""
+    def step_for(name, w):
+        return dc_v1_step_size(np.abs(w).max(),
+                               float(np.min(np.asarray(sigma[name]))), s)
+
+    importance = {k: 1.0 / (np.asarray(v) ** 2 + 1e-24)
+                  for k, v in sigma.items()}
+    entries = _quantize_state_dict(params, step_for, lam, importance, num_gr)
+    blob = encode_state_dict(entries, num_gr)
+    return CompressionResult(
+        blob=blob, report=compressed_size_report(entries, blob),
+        hyperparams={"method": "dc-v1", "S": s, "lam": lam},
+        quantized=entries)
+
+
+# ---------------------------------------------------------------------------
+# Grid-search drivers (paper Fig. 5 step 6 + appendix D/E)
+# ---------------------------------------------------------------------------
+
+def default_lambda_grid(num: int = 12) -> np.ndarray:
+    """Log-spaced lambdas as in appendix D (coarsened for practicality)."""
+    return 1e-4 * 2.0 ** (np.log2(1e2) * np.arange(num) / num)
+
+
+def default_s_grid() -> list[float]:
+    return [0.0, 8.0, 16.0, 32.0, 64.0, 96.0, 128.0, 160.0, 192.0, 256.0]
+
+
+def screen_deltas_nn(params: dict[str, np.ndarray], eval_fn: Callable,
+                     acc_floor: float, deltas: np.ndarray) -> np.ndarray:
+    """DC-v2 round 1: nearest-neighbour (lambda = 0) screening to find the
+    usable step-size range (paper §III-C-4)."""
+    keep = []
+    for d in deltas:
+        entries = {}
+        for name, w in params.items():
+            w = np.asarray(w)
+            if w.ndim < QUANT_MIN_NDIM:
+                entries[name] = w
+            else:
+                lv = nearest_level(w.ravel(), d).reshape(w.shape)
+                entries[name] = QuantizedTensor(lv, d, str(w.dtype))
+        rec = {k: (v.dequantize() if isinstance(v, QuantizedTensor) else v)
+               for k, v in entries.items()}
+        if eval_fn(rec) >= acc_floor:
+            keep.append(d)
+    return np.asarray(keep if keep else [float(deltas[0])])
+
+
+def search_dc_v2(params: dict[str, np.ndarray], eval_fn: Callable,
+                 orig_metric: float, tol: float = 0.005,
+                 deltas: np.ndarray | None = None,
+                 lambdas: np.ndarray | None = None,
+                 num_gr: int = B.DEFAULT_NUM_GR) -> CompressionResult:
+    """Smallest blob whose eval metric stays within ``tol`` of the original.
+
+    ``eval_fn(state_dict) -> metric`` (higher is better, e.g. accuracy).
+    """
+    if deltas is None:
+        deltas = 0.001 * 2.0 ** (np.log2(0.15 / 0.001) * np.arange(12) / 12)
+    if lambdas is None:
+        lambdas = np.concatenate([[0.0], default_lambda_grid(6)])
+    floor = orig_metric - tol
+    usable = screen_deltas_nn(params, eval_fn, floor, deltas)
+    best: CompressionResult | None = None
+    # largest usable deltas compress most; search top few with all lambdas
+    for d in sorted(usable.tolist(), reverse=True)[:4]:
+        for lam in lambdas:
+            res = compress_dc_v2(params, d, float(lam), num_gr)
+            if eval_fn(res.reconstructed()) >= floor:
+                if best is None or len(res.blob) < len(best.blob):
+                    best = res
+    if best is None:   # fall back to the finest screening point
+        best = compress_dc_v2(params, float(np.min(deltas)), 0.0, num_gr)
+    return best
+
+
+def search_dc_v1(params: dict[str, np.ndarray], sigma: dict[str, np.ndarray],
+                 eval_fn: Callable, orig_metric: float, tol: float = 0.005,
+                 s_grid: list[float] | None = None,
+                 lambdas: np.ndarray | None = None,
+                 num_gr: int = B.DEFAULT_NUM_GR) -> CompressionResult:
+    if s_grid is None:
+        s_grid = default_s_grid()
+    if lambdas is None:
+        lambdas = np.concatenate([[0.0], default_lambda_grid(6)])
+    floor = orig_metric - tol
+    best: CompressionResult | None = None
+    for s in s_grid:
+        for lam in lambdas:
+            res = compress_dc_v1(params, sigma, s, float(lam), num_gr)
+            if eval_fn(res.reconstructed()) >= floor:
+                if best is None or len(res.blob) < len(best.blob):
+                    best = res
+    if best is None:
+        best = compress_dc_v1(params, sigma, s_grid[-1], 0.0, num_gr)
+    return best

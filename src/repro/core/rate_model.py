@@ -1,0 +1,140 @@
+"""Vectorized CABAC code-length model for RD quantization (paper eq. 11).
+
+The RD assignment needs L_ik — the number of bits CABAC would spend on coding
+level k at position i.  Running the sequential coder inside the quantizer
+would serialize the whole operation, so DeepCABAC-style systems estimate the
+rate from *static per-context probabilities* gathered in a vectorized first
+pass (a provisional nearest-neighbour quantization), optionally iterating
+assignment → statistics → assignment.
+
+Everything here is pure numpy and O(n); the resulting rate tables are what
+``kernels/rd_quant`` consumes on TPU.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .binarization import DEFAULT_NUM_GR, EG_CTXS
+
+_EPS_P = 1.0 / 4096.0
+
+
+@dataclass
+class BinProbs:
+    """Static per-context P(bin == 1) estimates."""
+
+    p_sig: np.ndarray    # shape (2,): P(sig==1 | prev_sig)
+    p_sign: float        # P(negative | significant)
+    p_gr: np.ndarray     # shape (num_gr,): P(AbsGr(j)==1 | emitted), j=1..n
+    p_eg: np.ndarray     # shape (EG_CTXS,): P(unary bit==1 | emitted)
+    num_gr: int
+
+
+def _smooth(ones: np.ndarray | float, total: np.ndarray | float) -> np.ndarray:
+    p = (np.asarray(ones, dtype=np.float64) + 0.5) / (
+        np.asarray(total, dtype=np.float64) + 1.0)
+    return np.clip(p, _EPS_P, 1.0 - _EPS_P)
+
+
+def estimate_bin_probs(levels: np.ndarray,
+                       num_gr: int = DEFAULT_NUM_GR) -> BinProbs:
+    """Gather per-context statistics from a provisional level assignment."""
+    v = np.asarray(levels).astype(np.int64).ravel()
+    sig = v != 0
+    prev_sig = np.concatenate([[False], sig[:-1]])
+
+    sig_tot = np.array([np.sum(~prev_sig), np.sum(prev_sig)], dtype=np.float64)
+    sig_one = np.array([np.sum(sig & ~prev_sig), np.sum(sig & prev_sig)],
+                       dtype=np.float64)
+    p_sig = _smooth(sig_one, sig_tot)
+
+    a = np.abs(v[sig])
+    p_sign = float(_smooth(np.sum(v < 0), a.size))
+
+    js = np.arange(1, num_gr + 1)[:, None]
+    emitted = a[None, :] >= js               # flag j emitted iff a >= j
+    ones = a[None, :] > js
+    p_gr = _smooth(ones.sum(axis=1), emitted.sum(axis=1))
+
+    rem = a[a > num_gr] - num_gr             # i >= 1
+    if rem.size:
+        k = np.floor(np.log2(rem)).astype(np.int64)
+        pos = np.arange(EG_CTXS)[:, None]
+        kk = np.minimum(k, EG_CTXS - 1)      # cap positions at the last ctx
+        emitted_eg = kk[None, :] >= pos
+        ones_eg = kk[None, :] > pos
+        p_eg = _smooth(ones_eg.sum(axis=1), emitted_eg.sum(axis=1))
+    else:
+        p_eg = np.full(EG_CTXS, 0.5)
+    return BinProbs(p_sig=p_sig, p_sign=p_sign, p_gr=np.asarray(p_gr),
+                    p_eg=np.asarray(p_eg), num_gr=num_gr)
+
+
+def level_rates(vs: np.ndarray, probs: BinProbs, prev_sig: int) -> np.ndarray:
+    """Bits to code each (signed integer) level in ``vs`` — fully vectorized.
+
+    Closed-form decomposition of the binarization using cumulative context
+    cost tables; O(1) per element.
+    """
+    v = np.asarray(vs, dtype=np.int64)
+    num_gr = probs.num_gr
+    l1_sig = -np.log2(probs.p_sig[prev_sig])
+    l0_sig = -np.log2(1.0 - probs.p_sig[prev_sig])
+    l_neg = -np.log2(probs.p_sign)
+    l_pos = -np.log2(1.0 - probs.p_sign)
+
+    cum_gr1 = np.concatenate([[0.0], np.cumsum(-np.log2(probs.p_gr))])
+    l0_gr = -np.log2(1.0 - probs.p_gr)
+    cum_eg1 = np.concatenate([[0.0], np.cumsum(-np.log2(probs.p_eg))])
+    l0_eg = -np.log2(1.0 - probs.p_eg)
+
+    out = np.empty(v.shape, dtype=np.float64)
+    zero = v == 0
+    out[zero] = l0_sig
+
+    nz = ~zero
+    a = np.abs(v[nz])
+    r = np.full(a.shape, l1_sig)
+    r += np.where(v[nz] < 0, l_neg, l_pos)
+
+    small = a <= num_gr
+    a_s = a[small]
+    r_small = cum_gr1[a_s - 1] + l0_gr[a_s - 1]
+    big = ~small
+    a_b = a[big]
+    i = a_b - num_gr
+    k = np.floor(np.log2(i)).astype(np.int64)
+    kk = np.minimum(k, EG_CTXS - 1)
+    r_big = cum_gr1[num_gr] + cum_eg1[kk] + (k - kk) * (-np.log2(
+        probs.p_eg[-1])) + l0_eg[kk] + k  # + k bypass bits
+    tmp = np.empty(a.shape, dtype=np.float64)
+    tmp[small] = r_small
+    tmp[big] = r_big
+    out[nz] = r + tmp
+    return out
+
+
+@dataclass
+class RateTable:
+    """Rate lookup L[prev_sig, level + max_level] in bits."""
+
+    bits: np.ndarray      # (2, 2*max_level+1) float32
+    max_level: int
+
+    def lookup(self, levels: np.ndarray, prev_sig: np.ndarray) -> np.ndarray:
+        idx = np.clip(levels, -self.max_level, self.max_level) + self.max_level
+        return self.bits[prev_sig.astype(np.int64), idx.astype(np.int64)]
+
+
+def build_rate_table(probs: BinProbs, max_level: int) -> RateTable:
+    vs = np.arange(-max_level, max_level + 1)
+    bits = np.stack([level_rates(vs, probs, 0), level_rates(vs, probs, 1)])
+    return RateTable(bits=bits.astype(np.float32), max_level=max_level)
+
+
+def rate_table_from_levels(levels: np.ndarray, max_level: int,
+                           num_gr: int = DEFAULT_NUM_GR) -> RateTable:
+    return build_rate_table(estimate_bin_probs(levels, num_gr), max_level)

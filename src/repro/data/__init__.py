@@ -1,0 +1,1 @@
+from .pipeline import make_batch, make_eval_batches  # noqa: F401

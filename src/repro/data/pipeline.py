@@ -1,0 +1,55 @@
+"""Deterministic synthetic token pipeline.
+
+Stateless-by-construction: batch contents are a pure function of
+(seed, step), so (a) restart-after-failure resumes the exact stream from the
+checkpointed step with no pipeline state to persist, and (b) each host can
+materialize just its shard (deterministic per-host slicing) — the property a
+1000-node data plane needs for straggler-free, coordination-free input.
+
+The stream is a noisy affine-recurrence language
+    t_{k+1} = (a * t_k + b) mod V   with prob (1 - noise), else uniform
+so models can actually learn it (loss decreases), which the end-to-end
+examples and convergence tests rely on.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _rng_for(seed: int, step: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, step]))
+
+
+def make_batch(cfg, step: int, *, batch: int, seq: int, seed: int = 1234,
+               noise: float = 0.1) -> dict:
+    """Batch dict matching the arch's input signature (tokens or embeds)."""
+    rng = _rng_for(seed, step)
+    v = cfg.vocab_size
+    a, b = 31, 17
+    start = rng.integers(0, v, size=(batch, 1))
+    toks = np.empty((batch, seq + 1), dtype=np.int64)
+    toks[:, :1] = start
+    for t in range(seq):
+        nxt = (a * toks[:, t] + b) % v
+        flip = rng.random(batch) < noise
+        nxt = np.where(flip, rng.integers(0, v, batch), nxt)
+        toks[:, t + 1] = nxt
+    out: dict = {"labels": toks[:, 1:].astype(np.int32)}
+    if cfg.embed_input:
+        out["tokens"] = toks[:, :-1].astype(np.int32)
+    else:
+        # stub frontend: deterministic per-token embedding (fixed projection)
+        emb_rng = _rng_for(seed, -1)
+        table = emb_rng.standard_normal((v, cfg.d_model)).astype(np.float32)
+        out["embeds"] = table[toks[:, :-1]]
+    if cfg.m_rope:
+        pos = np.broadcast_to(np.arange(seq)[None, None], (3, batch, seq))
+        out["pos3d"] = pos.astype(np.int32)
+    return out
+
+
+def make_eval_batches(cfg, n: int, *, batch: int, seq: int,
+                      seed: int = 9999) -> list[dict]:
+    return [make_batch(cfg, 10_000_000 + i, batch=batch, seq=seq, seed=seed)
+            for i in range(n)]

@@ -1,0 +1,2 @@
+from .sharding import (DEFAULT_RULES, activation_sharding,  # noqa: F401
+                       build_param_specs, constrain, spec_for)

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for DeepCABAC's compute hot-spots:
+#   rd_quant       — eq. (11) RD assignment (encoder hot-spot)
+#   dequant_matmul — int8-level dequantize fused into the serving matmul
+# Each subpackage ships kernel.py (pallas_call + BlockSpec), ops.py (jit
+# wrapper with interpret switch) and ref.py (pure-jnp oracle).

@@ -1,0 +1,1 @@
+from .ops import dequant_matmul  # noqa: F401

@@ -1,0 +1,45 @@
+"""jit'd public wrapper for the fused dequantize-matmul kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import dequant_matmul_pallas
+from .ref import dequant_matmul_ref
+
+
+def _pad_to(x: jnp.ndarray, mult: tuple[int, ...]) -> jnp.ndarray:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mult)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                              "use_ref"))
+def _dequant_matmul_jit(x, w_q, scale, *, bm, bn, bk, interpret, use_ref):
+    if use_ref:
+        return dequant_matmul_ref(x, w_q, scale)
+    m, n = x.shape[0], w_q.shape[1]
+    xp = _pad_to(x, (bm, bk))
+    wp = _pad_to(w_q, (bk, bn))
+    sp = _pad_to(scale, (bn,))
+    out = dequant_matmul_pallas(xp, wp, sp, bm=bm, bn=bn, bk=bk,
+                                interpret=interpret)
+    return out[:m, :n]
+
+
+def dequant_matmul(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray, *,
+                   bm: int = 256, bn: int = 256, bk: int = 512,
+                   interpret: bool = False,
+                   use_ref: bool = False) -> jnp.ndarray:
+    """Serving matmul against DeepCABAC-quantized weights.
+
+    x (M, K), w_q (K, N) int8 levels, scale (N,) per-channel Delta.
+    """
+    return _dequant_matmul_jit(jnp.asarray(x), jnp.asarray(w_q),
+                               jnp.asarray(scale), bm=bm, bn=bn, bk=bk,
+                               interpret=interpret, use_ref=use_ref)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused dequantize-matmul serving kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant_matmul_ref(x: jnp.ndarray, w_q: jnp.ndarray,
+                       scale: jnp.ndarray) -> jnp.ndarray:
+    """x (M, K) float  @  dequant(w_q (K, N) int8, scale (N,) f32) -> (M, N).
+
+    q = Delta * level (paper §III-C-1); scale is the per-output-channel Delta.
+    Accumulation in f32 as on the MXU.
+    """
+    w = w_q.astype(jnp.float32) * scale[None, :].astype(jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32)

@@ -1,0 +1,44 @@
+"""jit'd wrapper: GQA-aware flash attention over (B, S, H, D) layouts."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BK, DEFAULT_BQ, flash_attention_pallas
+from .ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                              "interpret", "use_ref"))
+def _flash(qf, kf, vf, *, causal, bq, bk, interpret, use_ref):
+    if use_ref:
+        return flash_attention_ref(qf, kf, vf, causal=causal)
+    return flash_attention_pallas(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                                  interpret=interpret)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, bq: int = DEFAULT_BQ,
+                    bk: int = DEFAULT_BK, interpret: bool = False,
+                    use_ref: bool = False) -> jnp.ndarray:
+    """q (B, Sq, H, D); k, v (B, Skv, G, D) with G | H -> (B, Sq, H, D).
+
+    KV heads are expanded logically (repeat) before the kernel; sequence
+    lengths must be multiples of the block sizes (the model pads its own
+    sequences; pick bq/bk accordingly for odd shapes or use use_ref)."""
+    b, sq, h, d = q.shape
+    skv, g = k.shape[1], k.shape[2]
+    rep = h // g
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1).reshape(
+        b * h, skv, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1).reshape(
+        b * h, skv, d)
+    bq_eff = min(bq, sq)
+    bk_eff = min(bk, skv)
+    out = _flash(qf, kf, vf, causal=causal, bq=bq_eff, bk=bk_eff,
+                 interpret=interpret, use_ref=use_ref)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel (causal MHA)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True) -> jnp.ndarray:
+    """q (BH, Sq, D); k, v (BH, Skv, D) -> (BH, Sq, D), f32 accumulation.
+    Causal alignment: query i attends keys j <= i + (Skv - Sq)."""
+    sq, skv = q.shape[1], k.shape[1]
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        offs = skv - sq
+        mask = (jnp.arange(skv)[None, :]
+                <= jnp.arange(sq)[:, None] + offs)
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

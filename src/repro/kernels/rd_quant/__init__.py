@@ -1,0 +1,1 @@
+from .ops import pack_rate_params, rd_quant  # noqa: F401

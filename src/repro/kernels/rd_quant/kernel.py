@@ -1,0 +1,93 @@
+"""Pallas TPU kernel for the eq. (11) RD assignment.
+
+Tiling: the flattened weight tensor is viewed as (M, LANES) with
+LANES = 1024 (8 sublanes x 128 lanes); each grid step processes a
+(BLOCK_M, 1024) tile of w / fisher / prev_sig resident in VMEM
+(3 x 1 MB in + 1 MB out at BLOCK_M = 256, f32), leaving headroom for the
+unrolled candidate loop.  The rate model arrives as two tiny replicated
+coefficient rows (see coeffs.py) so no dynamic gather is needed — the
+magnitude-class select unrolls into compare/selects on the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .coeffs import (SC_L0_SIG0, SC_L0_SIG1, SC_L1_SIG0, SC_L1_SIG1, SC_LNEG,
+                     SC_LPOS)
+
+LANES = 1024
+BLOCK_M = 256
+
+
+def _floor_log2(i: jnp.ndarray) -> jnp.ndarray:
+    bits = lax.bitcast_convert_type(i.astype(jnp.float32), jnp.int32)
+    return ((bits >> 23) & 0xFF) - 127
+
+
+def _rate(k, ps, s_row, m_row, num_gr, n_classes):
+    l0 = s_row[SC_L0_SIG0] * (1.0 - ps) + s_row[SC_L0_SIG1] * ps
+    l1 = s_row[SC_L1_SIG0] * (1.0 - ps) + s_row[SC_L1_SIG1] * ps
+    a = jnp.abs(k)
+    small = a <= num_gr
+    cls_small = jnp.maximum(a - 1.0, 0.0)
+    i = jnp.maximum(a - num_gr, 1.0)
+    cls_big = num_gr + _floor_log2(i).astype(jnp.float32)
+    cls = jnp.where(small, cls_small, cls_big).astype(jnp.int32)
+    mag = jnp.zeros_like(a)
+    for c in range(n_classes):
+        mag = mag + jnp.where(cls == c, m_row[c], 0.0)
+    sign_cost = jnp.where(k < 0, s_row[SC_LNEG], s_row[SC_LPOS])
+    return jnp.where(a == 0, l0, l1 + sign_cost + mag)
+
+
+def _rd_quant_kernel(w_ref, f_ref, ps_ref, sc_ref, mag_ref, out_ref, *,
+                     step, lam, window, max_level, num_gr, n_classes):
+    w = w_ref[...]
+    f = f_ref[...]
+    ps = ps_ref[...]
+    s_row = sc_ref[0, :]
+    m_row = mag_ref[0, :]
+    inv_step = 1.0 / step
+    nn = jnp.clip(jnp.round(w * inv_step), -max_level, max_level)
+    best_cost = jnp.full(w.shape, jnp.inf, dtype=jnp.float32)
+    best_k = nn
+    # window candidates + the zero level (large-lambda escape)
+    for d in list(range(-window, window + 1)) + [None]:
+        k = (jnp.clip(nn + d, -max_level, max_level) if d is not None
+             else jnp.zeros_like(nn))
+        dist = f * jnp.square(w - step * k)
+        cost = dist + lam * _rate(k, ps, s_row, m_row, num_gr, n_classes)
+        better = cost < best_cost
+        best_cost = jnp.where(better, cost, best_cost)
+        best_k = jnp.where(better, k, best_k)
+    out_ref[...] = best_k.astype(jnp.int32)
+
+
+def rd_quant_pallas(w2d: jnp.ndarray, f2d: jnp.ndarray, ps2d: jnp.ndarray,
+                    scalars: jnp.ndarray, mag_rate: jnp.ndarray, *,
+                    step: float, lam: float, window: int, max_level: int,
+                    num_gr: int, interpret: bool = False) -> jnp.ndarray:
+    """Inputs already shaped (M, LANES) with M % BLOCK_M == 0."""
+    m = w2d.shape[0]
+    n_classes = mag_rate.shape[-1]
+    grid = (m // BLOCK_M,)
+    tile = pl.BlockSpec((BLOCK_M, LANES), lambda i: (i, 0))
+    rep_s = pl.BlockSpec((1, scalars.shape[-1]), lambda i: (0, 0))
+    rep_m = pl.BlockSpec((1, n_classes), lambda i: (0, 0))
+    kernel = functools.partial(
+        _rd_quant_kernel, step=step, lam=lam, window=window,
+        max_level=max_level, num_gr=num_gr, n_classes=n_classes)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, rep_s, rep_m],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((m, LANES), jnp.int32),
+        interpret=interpret,
+    )(w2d, f2d, ps2d, scalars, mag_rate)

@@ -1,0 +1,79 @@
+"""jit'd public wrapper for the RD-quantization kernel.
+
+Handles flattening/padding to the (M, 1024) tile layout, coefficient packing
+from the numpy rate model, and the prev_sig fixed-point iteration (the same
+two-pass scheme as core.quant.rd_assign).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.rate_model import BinProbs
+from .coeffs import pack_coeffs
+from .kernel import BLOCK_M, LANES, rd_quant_pallas
+from .ref import rd_quant_ref
+
+pack_rate_params = pack_coeffs
+
+
+def _pad2d(x: jnp.ndarray, fill: float) -> tuple[jnp.ndarray, int]:
+    n = x.size
+    per_block = BLOCK_M * LANES
+    m = max((n + per_block - 1) // per_block, 1) * BLOCK_M
+    padded = jnp.full((m * LANES,), fill, dtype=jnp.float32)
+    padded = padded.at[:n].set(x.reshape(-1).astype(jnp.float32))
+    return padded.reshape(m, LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "step", "lam", "window", "max_level", "num_gr", "passes", "interpret",
+    "use_ref"))
+def _rd_quant_jit(w, fisher, scalars, mag_rate, *, step, lam, window,
+                  max_level, num_gr, passes, interpret, use_ref):
+    w2d, n = _pad2d(w, 0.0)
+    f2d, _ = _pad2d(fisher, 1.0)
+    flat_w = w2d.reshape(-1)
+
+    nn = jnp.clip(jnp.round(flat_w / step), -max_level, max_level)
+    levels = nn
+    for _ in range(max(passes, 1)):
+        sig = (levels != 0).astype(jnp.float32)
+        ps = jnp.concatenate([jnp.zeros((1,), jnp.float32), sig[:-1]])
+        ps2d = ps.reshape(w2d.shape)
+        if use_ref:
+            out = rd_quant_ref(w2d, f2d, ps2d, scalars, mag_rate, step=step,
+                               lam=lam, window=window, max_level=max_level,
+                               num_gr=num_gr)
+        else:
+            out = rd_quant_pallas(w2d, f2d, ps2d, scalars, mag_rate,
+                                  step=step, lam=lam, window=window,
+                                  max_level=max_level, num_gr=num_gr,
+                                  interpret=interpret)
+        levels = out.reshape(-1).astype(jnp.float32)
+    return levels[:n].astype(jnp.int32)
+
+
+def rd_quant(w, fisher, probs: BinProbs, *, step: float, lam: float,
+             window: int = 4, max_level: int = 1 << 20, passes: int = 2,
+             interpret: bool = False, use_ref: bool = False) -> jnp.ndarray:
+    """RD-quantize a tensor of any shape; returns int32 levels, same shape.
+
+    ``use_ref=True`` routes through the pure-jnp oracle (used on CPU and in
+    differential tests); otherwise the Pallas kernel runs (``interpret=True``
+    executes the kernel body in Python for validation off-TPU).
+    """
+    scalars, mag_rate = pack_coeffs(probs)
+    shape = np.shape(w)
+    out = _rd_quant_jit(
+        jnp.asarray(w).reshape(-1), jnp.asarray(
+            fisher if fisher is not None else np.ones(shape)).reshape(-1),
+        jnp.asarray(scalars), jnp.asarray(mag_rate), step=float(step),
+        lam=float(lam), window=int(window), max_level=int(max_level),
+        num_gr=int(probs.num_gr), passes=int(passes), interpret=interpret,
+        use_ref=use_ref)
+    return out.reshape(shape)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the RD-quantization kernel (paper eq. 11)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .coeffs import (SC_L0_SIG0, SC_L0_SIG1, SC_L1_SIG0, SC_L1_SIG1, SC_LNEG,
+                     SC_LPOS)
+
+
+def exp2_floor_log2(i: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2(i)) for integer-valued f32 i >= 1, exact via the IEEE
+    exponent field (f32 is exact for i < 2^24)."""
+    bits = lax.bitcast_convert_type(i.astype(jnp.float32), jnp.int32)
+    return ((bits >> 23) & 0xFF) - 127
+
+
+def level_rate(k: jnp.ndarray, prev_sig: jnp.ndarray, scalars: jnp.ndarray,
+               mag_rate: jnp.ndarray, num_gr: int) -> jnp.ndarray:
+    """Bits to code integer level array ``k`` (f32, integer-valued)."""
+    s = scalars.reshape(-1)
+    m = mag_rate.reshape(-1)
+    ps = prev_sig.astype(jnp.float32)
+    l0 = s[SC_L0_SIG0] * (1.0 - ps) + s[SC_L0_SIG1] * ps
+    l1 = s[SC_L1_SIG0] * (1.0 - ps) + s[SC_L1_SIG1] * ps
+
+    a = jnp.abs(k)
+    small = a <= num_gr
+    cls_small = jnp.maximum(a - 1.0, 0.0)
+    i = jnp.maximum(a - num_gr, 1.0)
+    cls_big = num_gr + exp2_floor_log2(i).astype(jnp.float32)
+    cls = jnp.where(small, cls_small, cls_big).astype(jnp.int32)
+    # one-hot select over the small class table (kernel-compatible: no gather)
+    mag = jnp.zeros_like(a)
+    for c in range(m.shape[0]):
+        mag = mag + jnp.where(cls == c, m[c], 0.0)
+    sign_cost = jnp.where(k < 0, s[SC_LNEG], s[SC_LPOS])
+    return jnp.where(a == 0, l0, l1 + sign_cost + mag)
+
+
+def rd_quant_ref(w: jnp.ndarray, fisher: jnp.ndarray, prev_sig: jnp.ndarray,
+                 scalars: jnp.ndarray, mag_rate: jnp.ndarray, *, step: float,
+                 lam: float, window: int, max_level: int,
+                 num_gr: int) -> jnp.ndarray:
+    """argmin_k F (w - step k)^2 + lam * rate(k) over k in a window around
+    the nearest-neighbour level.  Shapes: all inputs elementwise-aligned."""
+    w = w.astype(jnp.float32)
+    f = fisher.astype(jnp.float32)
+    nn = jnp.clip(jnp.round(w / step), -max_level, max_level)
+    best_cost = jnp.full(w.shape, jnp.inf, dtype=jnp.float32)
+    best_k = nn
+    # window candidates + the zero level (large-lambda escape; see
+    # core.quant.rd_assign)
+    for d in list(range(-window, window + 1)) + [None]:
+        k = (jnp.clip(nn + d, -max_level, max_level) if d is not None
+             else jnp.zeros_like(nn))
+        dist = f * jnp.square(w - step * k)
+        rate = level_rate(k, prev_sig, scalars, mag_rate, num_gr)
+        cost = dist + lam * rate
+        better = cost < best_cost
+        best_cost = jnp.where(better, cost, best_cost)
+        best_k = jnp.where(better, k, best_k)
+    return best_k.astype(jnp.int32)

@@ -1,0 +1,3 @@
+from .config import ModelConfig  # noqa: F401
+from .transformer import (decode_step, init_params, prefill,  # noqa: F401
+                          train_loss)

@@ -1,0 +1,234 @@
+"""Attention: GQA (+qk-norm, +bias, +M-RoPE) and MLA, with flash-scan.
+
+The flash-scan path never materializes the full (Sq, Skv) score matrix: it
+lax.scan's over KV blocks with an online-softmax carry (running max, running
+denominator, accumulator) — the standard memory-safe formulation for 32k+
+prefill.  GQA expansion happens inside the einsum (q reshaped to
+(B, S, KVH, rep, D)), so K/V are never repeated in memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..distributed.sharding import constrain
+from ..serve.quantized import dequant_cache_value, quantize_cache_value
+from .layers import apply_m_rope, apply_rope, rms_norm
+
+
+def _cache_store(x, cache_arr):
+    """Quantize to the cache's storage dtype (int8 fixed-point serving)."""
+    if cache_arr.dtype == jnp.int8:
+        return quantize_cache_value(x)
+    return x.astype(cache_arr.dtype)
+
+
+def _cache_load(arr, dtype):
+    if arr.dtype == jnp.int8:
+        return dequant_cache_value(arr, dtype)
+    return arr
+
+NEG_INF = -1e30
+
+
+def _online_softmax_scan(q5, k, v, qpos, kv_block: int,
+                         kv_len: jnp.ndarray | None) -> jnp.ndarray:
+    """q5 (B,Sq,G,R,D); k,v (B,Skv,G,D); qpos (B,Sq) global positions.
+    Returns (B,Sq,G,R,D)."""
+    b, sq, g, r, d = q5.shape
+    dv = v.shape[-1]
+    skv = k.shape[1]
+    nb = -(-skv // kv_block)
+    pad = nb * kv_block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nb, kv_block, g, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, kv_block, g, dv).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        k_i, v_i, i = blk
+        kpos = i * kv_block + jnp.arange(kv_block)
+        # keep K/V in their storage dtype; accumulate on the MXU in f32
+        # (an explicit astype would materialize f32 copies of the whole
+        # K/V stream in HBM — observed +8x on the decode memory term)
+        s = jnp.einsum("bsgrd,btgd->bgrst", q5, k_i,
+                       preferred_element_type=jnp.float32) * scale
+        mask = kpos[None, None, None, None, :] <= \
+            qpos[:, None, None, :, None]
+        if kv_len is not None:
+            mask &= kpos[None, None, None, None, :] < \
+                kv_len[:, None, None, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bgrst,btgd->bgrsd", p.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, g, r, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, g, r, sq), jnp.float32)
+    a0 = jnp.zeros((b, g, r, sq, dv), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0),
+                              (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q5.dtype)  # (B,Sq,G,R,D)
+
+
+def _naive_attend(q5, k, v, qpos, kv_len) -> jnp.ndarray:
+    b, sq, g, r, d = q5.shape
+    skv = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    # K/V stay in storage dtype — f32 accumulation happens on the MXU
+    s = jnp.einsum("bsgrd,btgd->bgrst", q5, k,
+                   preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(skv)
+    mask = kpos[None, None, None, None, :] <= qpos[:, None, None, :, None]
+    if kv_len is not None:
+        mask &= kpos[None, None, None, None, :] < \
+            kv_len[:, None, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q5.dtype)
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           qpos: jnp.ndarray, *, impl: str = "scan", kv_block: int = 1024,
+           kv_len: jnp.ndarray | None = None) -> jnp.ndarray:
+    """q (B,Sq,H,D); k,v (B,Skv,G,D) with G | H.  qpos (B,Sq).
+
+    impl: "scan" (pure-JAX flash, compiles everywhere incl. the dry-run),
+    "pallas_flash" (the VMEM-resident TPU kernel; kernels/flash_attention),
+    "naive" (reference).  Decode (Sq == 1) always takes the naive path.
+    """
+    b, sq, h, d = q.shape
+    g = k.shape[2]
+    dv = v.shape[-1]
+    if impl == "pallas_flash" and sq > 1 and kv_len is None and d == dv:
+        from ..kernels.flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=True)
+    q5 = q.reshape(b, sq, g, h // g, d)
+    if impl == "scan" and sq > 1:
+        out = _online_softmax_scan(q5, k, v, qpos, kv_block, kv_len)
+    else:
+        out = _naive_attend(q5, k, v, qpos, kv_len)
+    return out.reshape(b, sq, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_attention(x, p, cfg, positions, *, cache=None, cache_pos=None,
+                  positions_3d=None):
+    """x (B,S,d).  Returns (out (B,S,d), new_cache | None).
+
+    Prefill/train: cache None (train) or dict to fill (prefill).
+    Decode: S == 1, cache holds (B, Smax, G, D), cache_pos scalar.
+    """
+    b, s, _ = x.shape
+    h, g, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"])
+    k = jnp.einsum("bsd,dk->bsk", x, p["wk"])
+    v = jnp.einsum("bsd,dk->bsk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = constrain(q.reshape(b, s, h, dh), "batch", "seq", "heads", None)
+    k = constrain(k.reshape(b, s, g, dh), "batch", "seq", "kv_heads", None)
+    v = constrain(v.reshape(b, s, g, dh), "batch", "seq", "kv_heads", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.m_rope:
+        q = apply_m_rope(q, positions_3d, cfg.rope_theta, cfg.m_rope_sections)
+        k = apply_m_rope(k, positions_3d, cfg.rope_theta, cfg.m_rope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    kv_len = None
+    if cache is not None and cache_pos is not None:        # decode step
+        ck = lax.dynamic_update_slice_in_dim(
+            cache["k"], _cache_store(k, cache["k"]), cache_pos, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(
+            cache["v"], _cache_store(v, cache["v"]), cache_pos, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        k, v = _cache_load(ck, q.dtype), _cache_load(cv, q.dtype)
+        kv_len = jnp.full((b,), cache_pos + s, dtype=jnp.int32)
+    elif cache is not None:                                 # prefill: fill
+        ck = lax.dynamic_update_slice_in_dim(
+            cache["k"], _cache_store(k, cache["k"]), 0, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(
+            cache["v"], _cache_store(v, cache["v"]), 0, axis=1)
+        new_cache = {"k": ck, "v": cv}
+
+    out = attend(q, k, v, positions, impl=cfg.attn_impl,
+                 kv_block=cfg.attn_kv_block, kv_len=kv_len)
+    out = jnp.einsum("bsk,kd->bsd", out.reshape(b, s, h * dh), p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_attention(x, p, cfg, positions, *, cache=None, cache_pos=None):
+    """Latent-cache attention: the KV cache stores only (c_kv, k_rope)."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    if cfg.q_lora_rank:
+        ql = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"],
+                      cfg.norm_eps)
+        q = jnp.einsum("bsr,rk->bsk", ql, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dk->bsk", x, p["w_uq"])
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"],
+                   cfg.norm_eps)
+    kr = apply_rope(jnp.einsum("bsd,dr->bsr", x, p["w_kr"])[:, :, None, :],
+                    positions, cfg.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    kv_len = None
+    if cache is not None and cache_pos is not None:        # decode
+        ckv_all = lax.dynamic_update_slice_in_dim(
+            cache["ckv"], _cache_store(ckv, cache["ckv"]), cache_pos, axis=1)
+        kr_all = lax.dynamic_update_slice_in_dim(
+            cache["kr"], _cache_store(kr, cache["kr"]), cache_pos, axis=1)
+        new_cache = {"ckv": ckv_all, "kr": kr_all}
+        ckv = _cache_load(ckv_all, x.dtype)
+        kr = _cache_load(kr_all, x.dtype)
+        kv_len = jnp.full((b,), cache_pos + s, dtype=jnp.int32)
+    elif cache is not None:                                 # prefill
+        ckv_all = lax.dynamic_update_slice_in_dim(
+            cache["ckv"], _cache_store(ckv, cache["ckv"]), 0, axis=1)
+        kr_all = lax.dynamic_update_slice_in_dim(
+            cache["kr"], _cache_store(kr, cache["kr"]), 0, axis=1)
+        new_cache = {"ckv": ckv_all, "kr": kr_all}
+
+    # up-project latents (recompute path; absorbed path is a perf option)
+    k_nope = jnp.einsum("bsr,rk->bsk", ckv, p["w_uk"]).reshape(b, -1, h, dn)
+    vv = jnp.einsum("bsr,rk->bsk", ckv, p["w_uv"]).reshape(b, -1, h, dv)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None, :],
+                                  (*kr.shape[:2], h, dr))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attend(q_full, k_full, vv, positions, impl=cfg.attn_impl,
+                 kv_block=cfg.attn_kv_block, kv_len=kv_len)
+    out = jnp.einsum("bsk,kd->bsd", out.reshape(b, s, h * dv), p["wo"])
+    return out, new_cache

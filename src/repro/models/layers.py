@@ -1,0 +1,72 @@
+"""Shared layer primitives: norms, activations, RoPE / M-RoPE, MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
+            ).astype(dtype)
+
+
+def activation(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def swiglu_mlp(x: jnp.ndarray, p: dict, act: str) -> jnp.ndarray:
+    gate = activation(jnp.einsum("...d,df->...f", x, p["w_gate"]), act)
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    return jnp.einsum("...f,fd->...d", gate * up, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x (..., S, H, D); positions (..., S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x: jnp.ndarray, positions_3d: jnp.ndarray, theta: float,
+                 sections: tuple[int, int, int]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.  x (B, S, H, D), positions_3d (3, B, S).
+
+    The D/2 rotation frequencies are split into (t, h, w) sections; each
+    section rotates by its own positional stream (temporal / height / width).
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    ang_all = positions_3d[..., None].astype(jnp.float32) * freqs  # (3,B,S,D/2)
+    sec = jnp.zeros((d // 2,), dtype=jnp.int32)
+    sec = sec.at[sections[0]:sections[0] + sections[1]].set(1)
+    sec = sec.at[sections[0] + sections[1]:].set(2)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 0, -1), sec[None, None, :, None], axis=-1
+    )[..., 0]                                          # (B,S,D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

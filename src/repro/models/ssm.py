@@ -1,0 +1,174 @@
+"""Mamba2 — SSD (state-space duality) block, chunked scan + single-step decode.
+
+Chunked SSD (arXiv:2405.21060 §6): the sequence is split into chunks of
+length Q; within a chunk the recurrence is computed as a masked quadratic
+form (attention-like, MXU-friendly), across chunks a short lax.scan passes
+the (H, P, N) state.  This is the TPU-native adaptation: the quadratic
+intra-chunk part maps to the MXU, the O(S/Q) scan is cheap.
+
+Decode is the exact linear recurrence: state = a*state + dt*B*x per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import rms_norm
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a (..., l) -> (..., l, l) with out[t, s] = sum_{u in (s, t]} a_u
+    (lower-triangular; -inf above the diagonal)."""
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    d = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, a_log, b_mat, c_mat, chunk: int, state0=None):
+    """x (B,S,H,P); a_log (B,S,H) (= dt*A, negative); b_mat,c_mat (B,S,G,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    nc = s // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    ac = a_log.reshape(bsz, nc, chunk, h)
+    bc = b_mat.reshape(bsz, nc, chunk, g, n)
+    cc = c_mat.reshape(bsz, nc, chunk, g, n)
+
+    # intra-chunk (quadratic, MXU): y_diag[t] = sum_{s<=t} C_t B_s L_{t,s} x_s
+    ll = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))    # (B,nc,H,l,l)
+    cb = jnp.einsum("bctgn,bcsgn->bcgts", cc, bc)      # (B,nc,G,l,l)
+    cb = cb.reshape(bsz, nc, g, 1, chunk, chunk) * ll.reshape(
+        bsz, nc, g, rep, chunk, chunk)
+    y_diag = jnp.einsum("bcgrts,bcsgrp->bctgrp", cb,
+                        xc.reshape(bsz, nc, chunk, g, rep, p))
+
+    # chunk states: contribution of each chunk to the running state
+    a_cum = jnp.cumsum(ac, axis=2)                     # (B,nc,l,H)
+    a_tot = a_cum[:, :, -1, :]                         # (B,nc,H)
+    decay_out = jnp.exp(a_tot[:, :, None, :] - a_cum)  # (B,nc,l,H)
+    states = jnp.einsum(
+        "bcsgn,bcsgr,bcsgrp->bcgrpn", bc,
+        decay_out.reshape(bsz, nc, chunk, g, rep),
+        xc.reshape(bsz, nc, chunk, g, rep, p)).reshape(bsz, nc, h, p, n)
+
+    # inter-chunk recurrence
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, p, n), dtype=jnp.float32)
+
+    def step(carry, inp):
+        st_c, a_t = inp
+        new = carry * jnp.exp(a_t)[:, :, None, None] + st_c
+        return new, carry                               # emit state *before*
+
+    final, prev_states = lax.scan(
+        step, state0.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         a_tot.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # inter-chunk output: y_off[t] = C_t * decay_in[t] * state_prev
+    decay_in = jnp.exp(a_cum)                           # (B,nc,l,H)
+    y_off = jnp.einsum(
+        "bctgn,bctgr,bcgrpn->bctgrp", cc,
+        decay_in.reshape(bsz, nc, chunk, g, rep),
+        prev_states.reshape(bsz, nc, g, rep, p, n)).reshape(
+            bsz, nc, chunk, h, p)
+    y = y_diag.reshape(bsz, nc, chunk, h, p) + y_off
+    return y.reshape(bsz, s, h, p), final
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                 tail: jnp.ndarray | None = None):
+    """Depthwise causal conv. u (B,S,C), w (C,W), bias (C,).
+    Returns (out (B,S,C), new_tail (B,W-1,C))."""
+    width = w.shape[1]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([tail, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1], :] * w[:, i][None, None, :]
+              for i in range(width))
+    new_tail = up[:, -(width - 1):, :] if width > 1 else tail
+    return out + bias[None, None, :], new_tail
+
+
+def mamba2_mixer(x, p, cfg, *, cache=None):
+    """One Mamba2 mixer.  x (B,S,d_model).
+
+    cache (decode): {"conv": (B,W-1,convC), "state": (B,H,P,N)}; S must be 1.
+    Returns (y (B,S,d_model), new_cache | final-state cache for prefill).
+    """
+    bsz, s, _ = x.shape
+    h, pdim, n, g = (cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state,
+                     cfg.ssm_ngroups)
+    d_in = cfg.d_inner
+
+    # separate projections + per-segment depthwise convs (math-identical to
+    # the fused in_proj/conv, but every tensor dim shards cleanly on the TP
+    # axis — see DESIGN.md §6)
+    z = jnp.einsum("bsd,dk->bsk", x, p["w_z"])
+    xr = jnp.einsum("bsd,dk->bsk", x, p["w_x"])
+    br = jnp.einsum("bsd,dk->bsk", x, p["w_b"])
+    cr = jnp.einsum("bsd,dk->bsk", x, p["w_c"])
+    dt_raw = jnp.einsum("bsd,dk->bsk", x, p["w_dt"])     # (B,S,H)
+
+    tails = cache["conv"] if cache is not None else {"x": None, "b": None,
+                                                     "c": None}
+    xr, tx = _causal_conv(xr, p["conv_x_w"], p["conv_x_b"], tails["x"])
+    br, tb = _causal_conv(br, p["conv_b_w"], p["conv_b_b"], tails["b"])
+    cr, tc = _causal_conv(cr, p["conv_c_w"], p["conv_c_b"], tails["c"])
+    new_tail = {"x": tx, "b": tb, "c": tc}
+    xs = jax.nn.silu(xr).reshape(bsz, s, h, pdim)
+    b_mat = jax.nn.silu(br).reshape(bsz, s, g, n)
+    c_mat = jax.nn.silu(cr).reshape(bsz, s, g, n)
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"][None, None, :])  # (B,S,H)
+    neg_a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (H,)
+    a_log = dt * neg_a[None, None, :]
+
+    if cache is not None and s == 1:                    # decode step
+        state = cache["state"]                          # (B,H,P,N) f32
+        rep = h // g
+        a1 = jnp.exp(a_log[:, 0, :])                    # (B,H)
+        bx = jnp.einsum("bgn,bgrp,bgr->bgrpn",
+                        b_mat[:, 0].astype(jnp.float32),
+                        xs[:, 0].reshape(bsz, g, rep, pdim).astype(
+                            jnp.float32),
+                        dt[:, 0].reshape(bsz, g, rep)).reshape(
+                            bsz, h, pdim, n)
+        state = state * a1[:, :, None, None] + bx
+        y = jnp.einsum("bgn,bgrpn->bgrp",
+                       c_mat[:, 0].astype(jnp.float32),
+                       state.reshape(bsz, g, rep, pdim, n)).reshape(
+                           bsz, 1, h, pdim).astype(x.dtype)
+        new_cache = {"conv": new_tail, "state": state}
+    else:
+        xdt = xs * dt[..., None]                         # fold dt into x
+        # front-pad to a chunk multiple: zero inputs with zero initial state
+        # contribute nothing, so this is exact (incl. the final state)
+        pad = (-s) % cfg.ssm_chunk
+        if pad:
+            def fp(a):
+                widths = [(0, 0)] * a.ndim
+                widths[1] = (pad, 0)
+                return jnp.pad(a, widths)
+            xdt, a_log, b_mat, c_mat = map(fp, (xdt, a_log, b_mat, c_mat))
+        y, final_state = ssd_chunked(xdt.astype(jnp.float32), a_log,
+                                     b_mat.astype(jnp.float32),
+                                     c_mat.astype(jnp.float32),
+                                     cfg.ssm_chunk)
+        y = y[:, pad:].astype(x.dtype)
+        new_cache = {"conv": new_tail, "state": final_state}
+
+    y = y + p["d_skip"][None, None, :, None] * xs
+    y = y.reshape(bsz, s, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, new_cache

@@ -1,0 +1,147 @@
+"""AdamW with optional 8-bit block-quantized moments.
+
+The 8-bit variant stores first/second moments as int8 with per-block (128
+along the last axis) absmax scales — the same quantize-where-you-store
+philosophy as the paper, applied to optimizer state.  At 671B params this is
+the difference between Adam state fitting a 16 GB v5e or not
+(fp32 m+v = 8 B/param -> int8 m+v + scales ~ 2.06 B/param).
+
+Pure pytree-functional: ``state = adamw_init(params, cfg)``;
+``updates, state = adamw_update(grads, state, params, cfg, step)``.
+All ops are elementwise/jit-friendly and shard trivially under pjit (scales
+inherit the blocking of the last axis, which is the TP axis blocking).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+MOMENT_BLOCK = 128
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantized_moments: bool = False   # int8 m/v with blockwise scales
+
+
+# -- 8-bit moment codecs ------------------------------------------------------
+
+def _blockable(shape: tuple[int, ...]) -> bool:
+    return len(shape) >= 1 and shape[-1] % MOMENT_BLOCK == 0
+
+
+def _q8_encode(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x -> (int8 codes, float32 blockwise scales)."""
+    if _blockable(x.shape):
+        b = x.reshape(*x.shape[:-1], x.shape[-1] // MOMENT_BLOCK, MOMENT_BLOCK)
+        scale = jnp.max(jnp.abs(b), axis=-1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        codes = jnp.clip(jnp.round(b / scale), -127, 127).astype(jnp.int8)
+        return codes.reshape(x.shape), scale.squeeze(-1).astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def _q8_decode(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    if codes.ndim >= 1 and codes.shape[-1] % MOMENT_BLOCK == 0 and \
+            scale.ndim == codes.ndim:
+        b = codes.reshape(*codes.shape[:-1],
+                          codes.shape[-1] // MOMENT_BLOCK, MOMENT_BLOCK)
+        return (b.astype(jnp.float32) * scale[..., None]).reshape(codes.shape)
+    return codes.astype(jnp.float32) * scale
+
+
+def _q8_encode_sqrt(v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Second moment in sqrt-space: v spans many orders of magnitude, so
+    linear absmax codes flush small entries to zero and destabilize
+    1/sqrt(v).  Quantizing sqrt(v) halves the dynamic range in log terms —
+    the same trick 8-bit optimizers use via nonlinear quantization maps."""
+    return _q8_encode(jnp.sqrt(jnp.maximum(v, 0.0)))
+
+
+def _q8_decode_sqrt(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    r = _q8_decode(codes, scale)
+    return jnp.square(r)
+
+
+def _moment_scale_shape(shape: tuple[int, ...]) -> tuple[int, ...]:
+    if _blockable(shape):
+        return (*shape[:-1], shape[-1] // MOMENT_BLOCK)
+    return ()
+
+
+# -- init / update ------------------------------------------------------------
+
+def adamw_init(params, cfg: AdamWConfig):
+    def zeros_like_moment(p):
+        if cfg.quantized_moments:
+            return {
+                "m_q": jnp.zeros(p.shape, jnp.int8),
+                "m_s": jnp.zeros(_moment_scale_shape(p.shape), jnp.float32),
+                "v_q": jnp.zeros(p.shape, jnp.int8),
+                "v_s": jnp.zeros(_moment_scale_shape(p.shape), jnp.float32),
+            }
+        return {"m": jnp.zeros(p.shape, jnp.float32),
+                "v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"count": jnp.zeros((), jnp.int32),
+            "moments": jax.tree.map(zeros_like_moment, params)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 lr_scale: jnp.ndarray | float = 1.0):
+    """Returns (new_params, new_state)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+    bc1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mom):
+        g = g.astype(jnp.float32) * clip
+        if cfg.quantized_moments:
+            m = _q8_decode(mom["m_q"], mom["m_s"])
+            v = _q8_decode_sqrt(mom["v_q"], mom["v_s"])
+        else:
+            m, v = mom["m"], mom["v"]
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        if cfg.quantized_moments:
+            m_q, m_s = _q8_encode(m)
+            v_q, v_s = _q8_encode_sqrt(v)
+            return new_p, {"m_q": m_q, "m_s": m_s, "v_q": v_q, "v_s": v_s}
+        return new_p, {"m": m, "v": v}
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["moments"])
+    new_p, new_m = [], []
+    for p, g, mom in zip(flat_p, flat_g, flat_m):
+        np_, nm_ = upd(p, g, mom)
+        new_p.append(np_)
+        new_m.append(nm_)
+    return (jax.tree.unflatten(treedef, new_p),
+            {"count": count, "moments": jax.tree.unflatten(treedef, new_m)})

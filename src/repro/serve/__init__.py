@@ -1,0 +1,10 @@
+# NOTE: ServeEngine is imported lazily (repro.serve.engine) to avoid a
+# circular import: models.transformer uses serve.quantized for the
+# fixed-point serving path.
+
+
+def __getattr__(name):
+    if name == "ServeEngine":
+        from .engine import ServeEngine
+        return ServeEngine
+    raise AttributeError(name)

@@ -1,0 +1,96 @@
+"""Fixed-point serving: DeepCABAC-grid int8 weights (+ int8 KV cache).
+
+The paper's equidistant grid q = Delta * I (§III-C-1) "encourages fixed-
+point representations which can be exploited to perform inference with
+lower complexity".  On TPU the exploit is bandwidth: decode is HBM-bound on
+weight + KV-cache reads, so storing both as int8 levels with per-channel /
+per-layer Delta halves the dominant roofline term vs bf16 (quantified in
+EXPERIMENTS.md §Perf).  kernels/dequant_matmul is the matching MXU kernel;
+under the XLA path the dequantize happens in-core after int8 HBM reads.
+
+A quantized weight leaf is {"q8": int8 levels, "q8s": f32 per-out-channel
+Delta}; sharding rules strip the /q8 suffix and reuse the weight's spec.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def is_q8(leaf) -> bool:
+    return isinstance(leaf, dict) and "q8" in leaf and "q8s" in leaf
+
+
+def quantize_leaf(w: jnp.ndarray) -> dict:
+    """Per-output-channel (last dim) symmetric int8 on the DeepCABAC grid.
+
+    Stacked (L, ..., out) tensors keep a per-layer leading dim on the scale
+    so the layer scan can slice codes and scales together."""
+    wf = w.astype(jnp.float32)
+    if w.ndim >= 3:
+        axes = tuple(range(1, w.ndim - 1))
+        scale = jnp.max(jnp.abs(wf), axis=axes, keepdims=True)  # (L,1..,out)
+        q = jnp.clip(jnp.round(wf / jnp.maximum(scale / 127.0, 1e-12)),
+                     -127, 127).astype(jnp.int8)
+        scale_out = jnp.maximum(scale.reshape(w.shape[0], w.shape[-1])
+                                / 127.0, 1e-12)
+        return {"q8": q, "q8s": scale_out.astype(jnp.float32)}
+    scale = jnp.maximum(jnp.max(jnp.abs(wf), axis=tuple(
+        range(w.ndim - 1))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return {"q8": q, "q8s": scale.astype(jnp.float32)}
+
+
+def quantize_params_for_serving(params):
+    """int8-quantize the matmul weights: stacked layer tensors (ndim >= 3 —
+    per-layer vectors stack to 2-D and stay full precision, as the paper
+    leaves 1-D tensors unquantized) and the unstacked 2-D embed/head."""
+    def visit(path, leaf):
+        if not hasattr(leaf, "ndim") or \
+                not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        top = str(getattr(path[0], "key", "")) if path else ""
+        stacked = top in ("layers", "dense_layers")
+        if (stacked and leaf.ndim >= 3) or (not stacked and leaf.ndim == 2):
+            return quantize_leaf(leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def dequant_leaf(leaf, dtype):
+    if is_q8(leaf):
+        return (leaf["q8"].astype(jnp.float32) * leaf["q8s"]).astype(dtype)
+    return leaf
+
+
+def dequant_tree(tree, dtype):
+    """Dequantize all q8 leaves (applied per-layer inside the scan so HBM
+    sees int8 reads, not a materialized bf16 copy of the whole model)."""
+    return jax.tree.map(lambda x: dequant_leaf(x, dtype), tree,
+                        is_leaf=is_q8)
+
+
+def embed_lookup_q8(embed_leaf, tokens, dtype):
+    """Gather int8 rows first, dequantize after — the gather reads B*S rows
+    of int8 instead of the full-precision table."""
+    if is_q8(embed_leaf):
+        rows = jnp.take(embed_leaf["q8"], tokens, axis=0)
+        return (rows.astype(jnp.float32)
+                * embed_leaf["q8s"]).astype(dtype)
+    return jnp.take(embed_leaf, tokens, axis=0).astype(dtype)
+
+
+# -- int8 KV cache -------------------------------------------------------------
+
+CACHE_SCALE = 1.0 / 16.0   # fixed per-install Delta; |k|,|v| <~ 8 post-norm
+
+
+def quantize_cache_value(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / CACHE_SCALE),
+                    -127, 127).astype(jnp.int8)
+
+
+def dequant_cache_value(q: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * CACHE_SCALE).astype(dtype)

@@ -1,0 +1,3 @@
+from .steps import (TrainState, batch_specs, cache_logical_specs,  # noqa
+                    init_train_state, make_decode_step, make_prefill_step,
+                    make_train_step)

@@ -1,0 +1,186 @@
+"""pjit step factories: train_step / prefill / decode with full shardings.
+
+Each factory resolves parameter / optimizer / cache / batch shardings from
+the logical rule tables and returns a jitted function whose tracing happens
+inside the ``activation_sharding`` context, so every
+``with_sharding_constraint`` in the model resolves against the same mesh.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..distributed.compress import (CompressionConfig, ef_compress_update,
+                                    init_error_feedback)
+from ..distributed.sharding import (DEFAULT_RULES, PREFILL_RULES,
+                                    SERVE_RULES, activation_sharding,
+                                    build_param_specs, spec_for)
+from ..models.config import ModelConfig
+from ..models.transformer import (forward, init_cache, init_params,
+                                  train_loss)
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from ..optim.schedule import linear_warmup_cosine
+
+TrainState = dict  # {"params", "opt", "ef", "step"}
+
+
+# ---------------------------------------------------------------------------
+# Sharding resolution
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch: dict, mesh, rules=None):
+    def one(name, x):
+        nd = np.ndim(x)
+        if name == "pos3d":
+            return spec_for(np.shape(x), (None, "batch", "seq"), mesh, rules)
+        axes = ("batch", "seq", None)[:nd]
+        return spec_for(np.shape(x), axes, mesh, rules)
+    return {k: one(k, v) for k, v in batch.items()}
+
+
+_CACHE_AXES = {
+    "k": (None, "batch", "kv_seq", None, None),
+    "v": (None, "batch", "kv_seq", None, None),
+    "ckv": (None, "batch", "kv_seq", None),
+    "kr": (None, "batch", "kv_seq", None),
+    "x": (None, "batch", None, "tp"),
+    "b": (None, "batch", None, "tp"),
+    "c": (None, "batch", None, "tp"),
+    "state": (None, "batch", "heads", None, None),
+}
+
+
+def cache_logical_specs(cache, mesh, rules=None):
+    def leaf(path, x):
+        name = None
+        for k in reversed(path):
+            if hasattr(k, "key"):
+                name = str(k.key)
+                break
+        axes = _CACHE_AXES.get(name, (None,) * np.ndim(x))
+        return spec_for(np.shape(x), axes, mesh, rules)
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def state_specs(state, mesh, rules=None):
+    return {
+        "params": build_param_specs(state["params"], mesh, rules),
+        "opt": {"count": P(),
+                "moments": build_param_specs(state["opt"]["moments"], mesh,
+                                             rules)},
+        "ef": (build_param_specs(state["ef"], mesh, rules)
+               if state.get("ef") is not None else None),
+        "step": P(),
+    }
+
+
+def _sharded(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# State init
+# ---------------------------------------------------------------------------
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                     comp_cfg: CompressionConfig | None = None,
+                     seed: int = 0) -> TrainState:
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    state: TrainState = {
+        "params": params,
+        "opt": adamw_init(params, opt_cfg),
+        "ef": (init_error_feedback(params)
+               if comp_cfg and comp_cfg.enabled else None),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh, opt_cfg: AdamWConfig,
+                    comp_cfg: CompressionConfig | None = None,
+                    rules=None, total_steps: int = 10000,
+                    warmup: int = 100):
+    """Returns (train_step(state, batch) -> (state, metrics), specs dict)."""
+    rules = rules or DEFAULT_RULES
+    comp_cfg = comp_cfg or CompressionConfig(enabled=False)
+
+    def step_fn(state: TrainState, batch: dict):
+        with activation_sharding(mesh, rules):
+            loss, grads = jax.value_and_grad(train_loss)(
+                state["params"], batch, cfg)
+            ef = state["ef"]
+            if comp_cfg.enabled:
+                grads, ef = ef_compress_update(grads, ef, comp_cfg)
+            lr_scale = linear_warmup_cosine(state["step"], warmup,
+                                            total_steps)
+            params, opt = adamw_update(grads, state["opt"], state["params"],
+                                       opt_cfg, lr_scale)
+        new_state = {"params": params, "opt": opt, "ef": ef,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "lr_scale": lr_scale}
+        return new_state, metrics
+
+    def specs_of(state, batch):
+        return state_specs(state, mesh, rules), batch_specs(batch, mesh,
+                                                            rules)
+
+    def jitted(state, batch):
+        st_specs, b_specs = specs_of(state, batch)
+        return jax.jit(
+            step_fn,
+            in_shardings=(_sharded(st_specs, mesh), _sharded(b_specs, mesh)),
+            out_shardings=(_sharded(st_specs, mesh),
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0,),
+        )
+
+    return step_fn, jitted
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, rules=None, max_len=None):
+    rules = rules or PREFILL_RULES
+
+    def step_fn(params, batch):
+        with activation_sharding(mesh, rules):
+            b = (batch.get("tokens") if batch.get("tokens") is not None
+                 else batch["embeds"]).shape[0]
+            s = (batch.get("tokens") if batch.get("tokens") is not None
+                 else batch["embeds"]).shape[1]
+            caches = init_cache(cfg, b, max_len or s)
+            logits, new_caches, _ = forward(
+                params, cfg, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"), pos3d=batch.get("pos3d"),
+                caches=caches, last_only=True)
+        return logits[:, 0, :], new_caches
+
+    return step_fn
+
+
+def make_decode_step(cfg: ModelConfig, mesh, rules=None):
+    """serve_step: one new token against a filled KV/state cache."""
+    rules = rules or SERVE_RULES
+
+    def step_fn(params, caches, inputs, pos):
+        with activation_sharding(mesh, rules):
+            logits, new_caches, _ = forward(
+                params, cfg,
+                tokens=(inputs["tokens"][:, None]
+                        if "tokens" in inputs else None),
+                embeds=inputs.get("embeds"),
+                pos3d=inputs.get("pos3d"),
+                caches=caches, cache_pos=pos, last_only=True)
+        return logits[:, 0, :], new_caches
+
+    return step_fn

@@ -1,0 +1,81 @@
+"""Container/codec: pytree round-trips, dtype fidelity, size accounting."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.codec import (QuantizedTensor, decode_state_dict,
+                              encode_state_dict, resolve_dtype)
+from repro.core.deepcabac import compress_dc_v1, compress_dc_v2
+
+
+def test_state_dict_roundtrip_mixed():
+    rng = np.random.default_rng(0)
+    entries = {
+        "w1": QuantizedTensor((rng.standard_t(3, (32, 64)) * 4).astype(
+            np.int64), 0.01, "float32"),
+        "bias": rng.standard_normal(64).astype(np.float32),
+        "w_bf16": QuantizedTensor((rng.standard_normal((16, 16)) * 9).astype(
+            np.int64), 0.5, "bfloat16"),
+        "scalar_like": np.asarray([3], dtype=np.int32),
+    }
+    blob = encode_state_dict(entries)
+    out = decode_state_dict(blob, dequantize=False)
+    for k, v in entries.items():
+        if isinstance(v, QuantizedTensor):
+            assert isinstance(out[k], QuantizedTensor)
+            assert np.array_equal(out[k].levels, v.levels)
+            assert out[k].step == v.step
+            assert out[k].dtype == v.dtype
+        else:
+            assert np.array_equal(out[k], v)
+    deq = decode_state_dict(blob, dequantize=True)
+    assert deq["w_bf16"].dtype == resolve_dtype("bfloat16")
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31))
+def test_roundtrip_property_statedict(seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(1, 40, size=rng.integers(1, 4)))
+    levels = (rng.standard_t(2, shape) * 3).astype(np.int64)
+    entries = {"t": QuantizedTensor(levels, float(rng.random() + 1e-3))}
+    out = decode_state_dict(encode_state_dict(entries), dequantize=False)
+    assert np.array_equal(out["t"].levels, levels)
+
+
+def test_dc_v2_reconstruction_error_bounded():
+    rng = np.random.default_rng(1)
+    params = {"w": (rng.standard_normal((64, 64)) * 0.05).astype(np.float32)}
+    delta = 0.004
+    res = compress_dc_v2(params, delta=delta, lam=0.0)
+    rec = res.reconstructed()["w"]
+    assert np.max(np.abs(rec - params["w"])) <= delta / 2 + 1e-6
+
+
+def test_dc_v1_per_layer_step_sizes():
+    rng = np.random.default_rng(2)
+    params = {
+        "sensitive": (rng.standard_normal((32, 32)) * 0.02).astype(np.float32),
+        "robust": (rng.standard_normal((32, 32)) * 0.02).astype(np.float32),
+    }
+    sigma = {"sensitive": np.full((32, 32), 1e-4),
+             "robust": np.full((32, 32), 1e-1)}
+    res = compress_dc_v1(params, sigma, s=64.0, lam=0.0)
+    q = res.quantized
+    # eq. 12: smaller sigma_min -> smaller step -> finer quantization
+    assert q["sensitive"].step < q["robust"].step
+    err_s = np.max(np.abs(res.reconstructed()["sensitive"]
+                          - params["sensitive"]))
+    assert err_s <= q["sensitive"].step / 2 + 1e-7
+
+
+def test_compression_report_fields():
+    rng = np.random.default_rng(3)
+    params = {"w": (rng.standard_normal((128, 128)) * 0.03).astype(
+        np.float32)}
+    res = compress_dc_v2(params, delta=0.01, lam=1e-4)
+    r = res.report
+    assert r["params"] == 128 * 128
+    assert 0 < r["bits_per_param"] < 32
+    assert r["compressed_mb"] < r["orig_mb"]

@@ -1,0 +1,96 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle vs
+numpy reference."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import nearest_level, rd_assign
+from repro.core.rate_model import build_rate_table, estimate_bin_probs
+from repro.kernels.dequant_matmul import dequant_matmul
+from repro.kernels.dequant_matmul.ref import dequant_matmul_ref
+from repro.kernels.rd_quant import rd_quant
+
+
+def _weights(seed, n, sparsity=0.5, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal(n) * 0.05).astype(dtype)
+    w[rng.random(n) < sparsity] = 0
+    return w
+
+
+@pytest.mark.parametrize("n", [100, 4096, 262144 + 17])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_rd_quant_kernel_vs_oracle(n, dtype):
+    w = _weights(n, n, dtype=dtype)
+    step, lam = 0.008, 2e-4
+    nn = nearest_level(w, step)
+    probs = estimate_bin_probs(nn)
+    max_level = int(np.abs(nn).max()) + 8
+    table = build_rate_table(probs, max_level)
+    oracle = rd_assign(w.astype(np.float64), None, step, lam, table,
+                       window=4, max_level=max_level, passes=2)
+    pallas = np.asarray(rd_quant(w, None, probs, step=step, lam=lam,
+                                 window=4, max_level=max_level, passes=2,
+                                 interpret=True))
+    ref = np.asarray(rd_quant(w, None, probs, step=step, lam=lam,
+                              window=4, max_level=max_level, passes=2,
+                              use_ref=True))
+    assert np.array_equal(pallas, ref), "pallas must match jnp ref exactly"
+    agree = np.mean(pallas == oracle)
+    assert agree > 0.999, f"kernel vs numpy oracle agreement {agree}"
+
+
+@pytest.mark.parametrize("window", [1, 2, 6])
+def test_rd_quant_windows(window):
+    w = _weights(11, 20000)
+    step = 0.01
+    nn = nearest_level(w, step)
+    probs = estimate_bin_probs(nn)
+    out = np.asarray(rd_quant(w, None, probs, step=step, lam=1e-4,
+                              window=window, interpret=True))
+    # candidates are NN +- window plus the zero level (large-lambda escape)
+    within = np.abs(out - nn) <= window
+    assert np.all(within | (out == 0))
+
+
+def test_rd_quant_fisher():
+    w = _weights(12, 30000)
+    fisher = np.ones(30000)
+    fisher[:15000] = 1e5
+    step = 0.01
+    nn = nearest_level(w, step)
+    probs = estimate_bin_probs(nn)
+    out = np.asarray(rd_quant(w, fisher, probs, step=step, lam=1e-2,
+                              interpret=True))
+    hi = np.mean((w[:15000] - out[:15000] * step) ** 2)
+    lo = np.mean((w[15000:] - out[15000:] * step) ** 2)
+    assert hi < lo
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 512, 256), (130, 1024, 300),
+                                   (256, 2048, 512), (1, 512, 512)])
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_dequant_matmul_sweep(m, k, n, xdtype):
+    rng = np.random.default_rng(m * 7 + n)
+    x = jnp.asarray(rng.standard_normal((m, k)), xdtype)
+    wq = jnp.asarray(rng.integers(-127, 127, (k, n)), jnp.int8)
+    sc = jnp.asarray(rng.random(n) * 0.01, jnp.float32)
+    ref = np.asarray(dequant_matmul_ref(x, wq, sc))
+    out = np.asarray(dequant_matmul(x, wq, sc, interpret=True))
+    tol = 2e-4 if xdtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out, ref, rtol=tol,
+                               atol=tol * np.abs(ref).max())
+
+
+def test_dequant_matmul_matches_dequantized_dense():
+    """Fixed-point path == dequantize-then-matmul (paper §III-C-1)."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((64, 256)).astype(np.float32)
+    w = (rng.standard_normal((256, 128)) * 0.04).astype(np.float32)
+    step = 0.002
+    wq = np.clip(np.rint(w / step), -127, 127).astype(np.int8)
+    sc = np.full(128, step, np.float32)
+    dense = x @ (wq.astype(np.float32) * step)
+    out = np.asarray(dequant_matmul(x, wq, sc, interpret=True))
+    np.testing.assert_allclose(out, dense, rtol=1e-4, atol=1e-4)

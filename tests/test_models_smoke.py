@@ -1,0 +1,128 @@
+"""Per-arch smoke tests (reduced configs): one forward/train step on CPU,
+shape checks, no NaNs; prefill/decode consistency against full forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, shapes_for
+from repro.models.transformer import (decode_step, forward, init_params,
+                                      prefill, train_loss)
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    batch = {"labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.embed_input:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    else:
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                            jnp.float32)
+    if cfg.m_rope:
+        batch["pos3d"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+    logits, _, _ = forward(params, cfg, tokens=batch.get("tokens"),
+                           embeds=batch.get("embeds"),
+                           pos3d=batch.get("pos3d"))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, grads = jax.value_and_grad(train_loss)(params, batch, cfg)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode_consistency(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.family == "moe":
+        cfg = cfg.replace(capacity_factor=8.0)  # avoid capacity drops
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+    kw = ({"tokens": batch["tokens"]} if cfg.embed_input
+          else {"embeds": batch["embeds"]})
+    logits_full, _, _ = forward(params, cfg, pos3d=batch.get("pos3d"), **kw)
+    lg_pre, caches = prefill(params, cfg, max_len=S + 8,
+                             pos3d=batch.get("pos3d"), **kw)
+    np.testing.assert_allclose(np.asarray(lg_pre),
+                               np.asarray(logits_full[:, -1, :]),
+                               rtol=2e-4, atol=2e-4)
+    # one decode step must equal full forward over the extended sequence
+    if cfg.embed_input:
+        dt = {"tokens": batch["tokens"][:, 0]}
+        ext = jnp.concatenate([batch["tokens"], batch["tokens"][:, :1]], 1)
+        logits2, _, _ = forward(params, cfg, tokens=ext)
+    else:
+        dt = {"embeds": batch["embeds"][:, :1, :]}
+        ext = jnp.concatenate([batch["embeds"], batch["embeds"][:, :1, :]], 1)
+        p3 = None
+        if cfg.m_rope:
+            p3 = jnp.broadcast_to(jnp.arange(S + 1)[None, None],
+                                  (3, B, S + 1)).astype(jnp.int32)
+        logits2, _, _ = forward(params, cfg, embeds=ext, pos3d=p3)
+    p3d = None
+    if cfg.m_rope:
+        p3d = jnp.full((3, B, 1), S, dtype=jnp.int32)
+    lg_dec, _ = decode_step(params, cfg, caches, S, pos3d=p3d, **dt)
+    np.testing.assert_allclose(np.asarray(lg_dec),
+                               np.asarray(logits2[:, -1, :]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full (non-smoke) configs carry the exact assigned dimensions."""
+    cfg = get_config(arch)
+    spec = {
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "mistral-nemo-12b": (40, 5120, 32, 8, 14336, 131072),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 10944, 102400),
+        "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    }[arch]
+    assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == spec
+    if arch == "deepseek-v3-671b":
+        assert (cfg.num_experts, cfg.top_k, cfg.moe_d_ff,
+                cfg.num_shared_experts) == (256, 8, 2048, 1)
+        assert cfg.attention == "mla"
+    if arch == "deepseek-moe-16b":
+        assert (cfg.num_experts, cfg.top_k, cfg.moe_d_ff,
+                cfg.num_shared_experts) == (64, 6, 1408, 2)
+    if arch == "mamba2-2.7b":
+        assert cfg.ssm_state == 128
+    if arch == "zamba2-2.7b":
+        assert cfg.ssm_state == 64 and cfg.shared_attn_every == 6
+    if arch == "qwen2-vl-7b":
+        assert cfg.m_rope
+    if arch == "qwen1.5-4b":
+        assert cfg.qkv_bias
+    if arch == "qwen3-8b":
+        assert cfg.qk_norm
+
+
+def test_shape_skip_policy():
+    for arch in ARCH_IDS:
+        shapes = shapes_for(arch)
+        if arch in ("mamba2-2.7b", "zamba2-2.7b"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(shapes)
