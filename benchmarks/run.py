@@ -158,11 +158,11 @@ def bench_comm_compression(fast: bool):
     """Wire-rate of the EF-compressed gradient stream (paper §VI)."""
     import jax
     import jax.numpy as jnp
+    from repro.compression.q8 import q8_encode
     from repro.distributed.compress import (CompressionConfig,
                                             code_entropy_bits_per_param,
                                             ef_compress_update,
                                             init_error_feedback)
-    from repro.optim.adamw import _q8_encode
     rng = np.random.default_rng(3)
     g = {"w": jnp.asarray(rng.standard_normal((256, 1024)) * 1e-3,
                           jnp.float32)}
@@ -172,12 +172,36 @@ def bench_comm_compression(fast: bool):
     gq, ef = ef_compress_update(g, ef, cfg)
     jax.block_until_ready(gq)
     t1 = time.time()
-    codes, _ = _q8_encode(g["w"])
+    codes, _ = q8_encode(g["w"])
     ent = code_entropy_bits_per_param(codes)
     _row("comm/ef_int8", 1e6 * (t1 - t0),
          {"wire_bits_per_param_int8": 8.0 + 32.0 / 128,
           "cabac_entropy_bits_per_param": ent,
           "f32_baseline_bits": 32.0})
+
+
+def bench_compression_registry(fast: bool):
+    """Compress+decompress one pytree through every registered codec."""
+    from repro import compression
+    rng = np.random.default_rng(7)
+    n = 64 if fast else 128
+    tree = {
+        "layers": {"blk": {"w": (rng.standard_normal((2, n, 2 * n)) * 0.05
+                                 ).astype(np.float32)}},
+        "embed": (rng.standard_normal((4 * n, n)) * 0.05).astype(np.float32),
+        "norm": np.ones(n, np.float32),
+    }
+    for name in compression.available():
+        codec = compression.get(name)
+        t0 = time.time()
+        art = codec.compress(tree)
+        t1 = time.time()
+        codec.decompress(art.blob, like=tree)
+        t2 = time.time()
+        _row(f"compression/{name}", 1e6 * (t1 - t0),
+             {"bits_per_param": art.report["bits_per_param"],
+              "ratio_pct": art.report["ratio_pct"],
+              "decode_us": 1e6 * (t2 - t1)})
 
 
 def main() -> None:
@@ -193,6 +217,7 @@ def main() -> None:
     bench_rd_quant_kernel(args.fast)
     bench_dequant_matmul(args.fast)
     bench_comm_compression(args.fast)
+    bench_compression_registry(args.fast)
 
 
 if __name__ == "__main__":

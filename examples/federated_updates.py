@@ -12,12 +12,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.compression.q8 import q8_encode
 from repro.core import binarization as B
 from repro.core.cabac import RangeEncoder
 from repro.distributed.compress import (CompressionConfig,
                                         ef_compress_update,
                                         init_error_feedback)
-from repro.optim.adamw import _q8_encode
 
 
 def main():
@@ -39,7 +39,7 @@ def main():
             gq, efs[wkr] = ef_compress_update(g, efs[wkr], cfg)
             agg = agg + gq["w"]
             if step % 25 == 0 and wkr == 0:
-                codes, _ = _q8_encode(g["w"])
+                codes, _ = q8_encode(g["w"])
                 enc = RangeEncoder(B.make_contexts())
                 B.encode_levels(enc, np.asarray(codes,
                                                 np.int64).ravel()[:65536])

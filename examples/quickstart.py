@@ -2,9 +2,10 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Trains a small MLP on a synthetic task, compresses it with DC-v2 (the
-grid-search quantizer + CABAC), compares against uniform quantization +
-Huffman, and verifies accuracy survives.
+Trains a small MLP on a synthetic task, compresses it through the
+``repro.compression`` codec registry with DC-v2 (the grid quantizer +
+CABAC), compares against the scalar-Huffman baseline codec, and verifies
+accuracy survives.
 """
 
 import os
@@ -15,10 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import numpy as np  # noqa: E402
 
 from benchmarks.tasks import flat_weights, train_mlp  # noqa: E402
-from repro.core.deepcabac import compress_dc_v2  # noqa: E402
-from repro.core.codec import decode_state_dict  # noqa: E402
-from repro.core.huffman import scalar_huffman_size_bits  # noqa: E402
-from repro.core.quant import uniform_quantize  # noqa: E402
+from repro import compression  # noqa: E402
 
 
 def main():
@@ -28,11 +26,13 @@ def main():
     orig_acc = fx.accuracy(fx.params)
     orig_bits = 32 * sum(w.size for w in flat.values())
     print(f"original: acc={orig_acc:.4f}, size={orig_bits/8/1024:.1f} KiB")
+    print(f"registered codecs: {', '.join(compression.available())}")
 
     print("\nDeepCABAC (DC-v2), a few (Delta, lambda) points:")
     wmax = max(float(np.abs(w).max()) for w in flat.values() if w.ndim >= 2)
     for frac, lam in [(0.05, 0.0), (0.1, 1e-4), (0.25, 1e-3)]:
-        res = compress_dc_v2(flat, delta=frac * wmax, lam=lam)
+        codec = compression.get("deepcabac-v2", delta=frac * wmax, lam=lam)
+        res = codec.compress(flat)
         rec = res.reconstructed()
         acc = fx.accuracy({k: np.asarray(v) for k, v in rec.items()})
         ratio = orig_bits / (8 * len(res.blob))
@@ -41,20 +41,19 @@ def main():
               f"{res.report['bits_per_param']:.2f} bits/param")
 
     # decode round-trip through the container
-    blob = compress_dc_v2(flat, delta=0.05 * wmax, lam=1e-4).blob
-    restored = decode_state_dict(blob)
+    blob = compression.get("deepcabac-v2",
+                           delta=0.05 * wmax, lam=1e-4).compress(flat).blob
+    restored = compression.decompress(blob)
     assert set(restored) == set(flat)
     print(f"\ncontainer decode OK ({len(blob)} bytes)")
 
-    # baseline: uniform quantization + scalar Huffman
-    bits = 0
-    for w in flat.values():
-        if w.ndim >= 2:
-            a, centers = uniform_quantize(w.ravel(), 64)
-            bits += scalar_huffman_size_bits(a) + 32 * 64
-        else:
-            bits += 32 * w.size
-    print(f"uniform(64) + Huffman baseline: x{orig_bits/bits:.1f} smaller")
+    # baseline: same nearest-level grid, scalar Huffman with explicit table
+    huff = compression.get("huffman", delta_rel=0.25).compress(flat)
+    acc = fx.accuracy({k: np.asarray(v)
+                       for k, v in huff.reconstructed().items()})
+    print(f"huffman baseline: x{orig_bits/(8*len(huff.blob)):.1f} smaller, "
+          f"acc={acc:.4f} "
+          f"({huff.report['bits_per_param']:.2f} bits/param incl. tables)")
 
 
 if __name__ == "__main__":

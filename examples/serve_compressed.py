@@ -11,9 +11,8 @@ tokens as the raw-weight engine.
 import numpy as np
 import jax
 
-from repro.checkpoint.manager import flatten_tree
+from repro.compression import flatten_tree, get
 from repro.configs import get_smoke_config
-from repro.core.deepcabac import compress_dc_v2
 from repro.data.pipeline import make_batch
 from repro.models.transformer import init_params, train_loss
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
@@ -33,7 +32,7 @@ def main():
                              make_batch(cfg, i, batch=16, seq=64))
 
     flat = flatten_tree(params)
-    res = compress_dc_v2(flat, delta=1e-4, lam=0.0)
+    res = get("deepcabac-v2", delta=1e-4, lam=0.0).compress(flat)
     print(f"container: {len(res.blob)/1024:.1f} KiB "
           f"({res.report['bits_per_param']:.2f} bits/param, "
           f"x{100/res.report['ratio_pct']:.1f} vs fp32)")

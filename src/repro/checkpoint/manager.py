@@ -4,18 +4,19 @@ Responsibilities:
 * atomic writes (tmp dir + fsync + rename) — a crash mid-save never corrupts
   the latest checkpoint;
 * retention (keep last N);
-* DeepCABAC compression of the weight payload (per-tensor step size
-  Delta = delta_rel * std(w); quantization is deterministic, so resumed runs
-  are bit-reproducible given the same stream);
+* compression of the weight payload through the ``repro.compression``
+  Codec registry (default ``ckpt-nearest``: per-tensor step size
+  Delta = delta_rel * std(w); quantization is deterministic, so resumed
+  runs are bit-reproducible given the same stream);
 * elastic restore: arrays are saved unsharded and re-placed with the target
   mesh's NamedShardings, so the mesh shape may change between save and
   restore (scale up/down);
-* async save: the host-side quantize+CABAC encode runs on a worker thread
+* async save: the host-side quantize+encode runs on a worker thread
   over a snapshot while the device keeps training (compute/IO overlap).
 
 In a real multi-host deployment each host writes its own shard files; here a
 single process writes full arrays — the container format (chunked CABAC
-streams) is already per-shard-parallel.  See DESIGN.md §6.
+streams) is already per-shard-parallel.  See docs/compression_api.md.
 """
 
 from __future__ import annotations
@@ -30,46 +31,19 @@ from dataclasses import dataclass
 import jax
 import numpy as np
 
-from ..core.codec import (QuantizedTensor, decode_state_dict,
-                          encode_state_dict)
-from ..core.quant import nearest_level
-
-
-def flatten_tree(tree) -> dict[str, np.ndarray]:
-    out = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        parts = []
-        for k in path:
-            parts.append(str(k.key) if hasattr(k, "key") else str(k.idx))
-        out["/".join(parts)] = np.asarray(leaf)
-    return out
-
-
-def unflatten_like(flat: dict[str, np.ndarray], template):
-    leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
-    leaves = []
-    for path, leaf in leaves_t:
-        parts = []
-        for k in path:
-            parts.append(str(k.key) if hasattr(k, "key") else str(k.idx))
-        key = "/".join(parts)
-        if key not in flat:
-            raise KeyError(f"checkpoint missing tensor {key}")
-        arr = flat[key]
-        if tuple(arr.shape) != tuple(np.shape(leaf)):
-            raise ValueError(
-                f"{key}: checkpoint shape {arr.shape} != state "
-                f"{np.shape(leaf)}")
-        leaves.append(arr.astype(np.asarray(leaf).dtype))
-    return jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(template), leaves)
+from ..compression import decompress
+from ..compression.tree import flatten_tree, unflatten_like  # noqa: F401
+# flatten_tree/unflatten_like re-exported: they moved to compression.tree
+# but this module remains their historical import path.
 
 
 @dataclass
 class CheckpointConfig:
     directory: str
     keep: int = 3
-    params_mode: str = "cabac"     # cabac | raw
+    params_mode: str = "cabac"     # legacy alias: cabac | raw
+    codec: str | None = None       # compression-registry name; overrides
+                                   # params_mode when set (e.g. "serve-q8")
     delta_rel: float = 1e-3        # Delta = delta_rel * std(w)
     min_quant_ndim: int = 2        # 1-D tensors stored raw (paper protocol)
     async_save: bool = False
@@ -97,20 +71,16 @@ class CheckpointManager:
         return s[-1] if s else None
 
     # -- save ----------------------------------------------------------------
-    def _encode_params(self, flat_params: dict[str, np.ndarray]) -> bytes:
-        entries: dict[str, QuantizedTensor | np.ndarray] = {}
-        for name, w in flat_params.items():
-            if (self.cfg.params_mode == "cabac"
-                    and w.ndim >= self.cfg.min_quant_ndim
-                    and np.issubdtype(w.dtype, np.floating)):
-                wf = w.astype(np.float64)
-                std = float(wf.std())
-                step = max(self.cfg.delta_rel * std, 1e-12)
-                levels = nearest_level(wf.ravel(), step).reshape(w.shape)
-                entries[name] = QuantizedTensor(levels, step, str(w.dtype))
-            else:
-                entries[name] = w
-        return encode_state_dict(entries)
+    def _codec(self):
+        """Resolve the params codec from cfg (registry name or legacy
+        params_mode alias).  delta_rel/min_quant_ndim are forwarded to any
+        codec whose factory accepts them and ignored by the rest."""
+        from ..compression import make
+        name = self.cfg.codec
+        if name is None:
+            name = "ckpt-nearest" if self.cfg.params_mode == "cabac" else "raw"
+        return make(name, delta_rel=self.cfg.delta_rel,
+                    min_ndim=self.cfg.min_quant_ndim)
 
     def _write(self, payloads: dict[str, bytes], meta: dict, step: int):
         final = os.path.join(self.cfg.directory, f"step_{step:08d}")
@@ -146,6 +116,7 @@ class CheckpointManager:
         """Snapshot to host, then encode+write (optionally off-thread)."""
         snapshot = jax.device_get(state)
         blocking = (not self.cfg.async_save) if blocking is None else blocking
+        codec = self._codec()
 
         def work():
             flat_p = flatten_tree(snapshot["params"])
@@ -156,13 +127,20 @@ class CheckpointManager:
             bio = io.BytesIO()
             np.savez(bio, **other)
             buf["state.npz"] = bio.getvalue()
-            buf["params.dcbc"] = self._encode_params(flat_p)
+            buf["params.dcbc"] = codec.compress(flat_p).blob
             raw_bytes = sum(v.nbytes for v in flat_p.values())
-            meta = {"step": step, "params_mode": self.cfg.params_mode,
-                    "delta_rel": self.cfg.delta_rel,
+            # record only what was actually used: a config knob the chosen
+            # codec ignores (delta_rel, or params_mode once codec= is set)
+            # must not be recorded as if it shaped the payload
+            meta = {"step": step, "codec": codec.name,
+                    "codec_hyperparams": codec.hyperparams,
                     "params_raw_bytes": raw_bytes,
                     "params_compressed_bytes": len(buf["params.dcbc"]),
                     **(extra_meta or {})}
+            if self.cfg.codec is None:
+                meta["params_mode"] = self.cfg.params_mode
+            if "delta_rel" in codec.hyperparams:
+                meta["delta_rel"] = codec.hyperparams["delta_rel"]
             self._write(buf, meta, step)
 
         if blocking:
@@ -188,10 +166,9 @@ class CheckpointManager:
             raise FileNotFoundError("no checkpoints found")
         d = os.path.join(self.cfg.directory, f"step_{step:08d}")
         with open(os.path.join(d, "params.dcbc"), "rb") as f:
-            flat_p = decode_state_dict(f.read())
+            params = decompress(f.read(), like=template_state["params"])
         with open(os.path.join(d, "state.npz"), "rb") as f:
             other = dict(np.load(f, allow_pickle=False))
-        params = unflatten_like(flat_p, template_state["params"])
         rest_t = {k: v for k, v in template_state.items() if k != "params"}
         rest = unflatten_like(other, rest_t)
         state = {"params": params, **rest}

@@ -1,0 +1,66 @@
+"""Unified pytree-native compression API (quantizer x entropy coder).
+
+Every compression path in the repo — DC-v1/v2 research pipelines,
+checkpointing, fixed-point serving artifacts, baselines — composes the
+same three strategies behind one :class:`Codec`:
+
+    from repro import compression
+    codec = compression.get("deepcabac-v2", delta=0.01, lam=1e-4)
+    artifact = codec.compress(params)              # any jax pytree
+    tree = compression.decompress(artifact.blob, like=params)
+
+Registered codecs: ``deepcabac-v2``, ``ckpt-nearest``, ``serve-q8``,
+``huffman``, ``raw`` (see docs/compression_api.md).
+
+Import discipline: only the leaf modules (``artifact``, ``q8``, ``tree``)
+load eagerly — they import nothing from ``repro.core``.  The strategy /
+registry modules import ``repro.core``, whose ``deepcabac`` imports
+``.artifact`` back from this package, so they resolve lazily (PEP 562) to
+keep both import orders cycle-free.
+"""
+
+from .artifact import Artifact  # noqa: F401
+from .q8 import (Q8_BLOCK, q8_blockable, q8_decode,  # noqa: F401
+                 q8_decode_sqrt, q8_encode, q8_encode_sqrt, q8_scale_shape)
+from .tree import flatten_tree, unflatten_like  # noqa: F401
+
+_LAZY = {
+    "Codec": "codec",
+    "decompress": "codec",
+    "EntropyCoder": "coders",
+    "CabacCoder": "coders",
+    "HuffmanCoder": "coders",
+    "RawLevelCoder": "coders",
+    "Quantizer": "quantizers",
+    "RDGridQuantizer": "quantizers",
+    "NearestStdQuantizer": "quantizers",
+    "PerChannelInt8Quantizer": "quantizers",
+    "quantize_leaf": "quantizers",
+    "quantize_tree_q8": "quantizers",
+    "ndim_float_policy": "quantizers",
+    "serve_q8_policy": "quantizers",
+    "is_float_dtype": "quantizers",
+    "relative_step": "quantizers",
+    "get": "registry",
+    "make": "registry",
+    "register": "registry",
+    "available": "registry",
+}
+
+__all__ = sorted({"Artifact", "Q8_BLOCK", "q8_blockable", "q8_decode",
+                  "q8_decode_sqrt", "q8_encode", "q8_encode_sqrt",
+                  "q8_scale_shape", "flatten_tree", "unflatten_like",
+                  *_LAZY})
+
+
+def __getattr__(name: str):
+    submodule = _LAZY.get(name)
+    if submodule is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{submodule}", __name__), name)
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,35 @@
+"""Shared artifact type every compression path returns.
+
+Deliberately a leaf module (numpy only): ``core.deepcabac`` imports it to
+build ``CompressionResult`` on top, so it must not import back into
+``repro.core`` or the rest of this package.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Artifact:
+    """Result of compressing a pytree: serialized blob + bookkeeping.
+
+    ``quantized`` maps flat tensor names to either the quantized
+    representation (anything with a ``dequantize()`` method, e.g.
+    ``QuantizedTensor`` / ``Q8Tensor``) or the raw ndarray that passed
+    through uncoded.
+    """
+
+    blob: bytes
+    report: dict
+    hyperparams: dict
+    quantized: dict = field(repr=False, default_factory=dict)
+
+    def reconstructed(self) -> dict[str, np.ndarray]:
+        """Dequantized view of every entry (what a decoder will produce)."""
+        out = {}
+        for k, v in self.quantized.items():
+            out[k] = v.dequantize() if hasattr(v, "dequantize") else v
+        return out

@@ -1,0 +1,78 @@
+"""The Codec: Quantizer x EntropyCoder x per-tensor policy over pytrees.
+
+``compress`` accepts any jax pytree (or an already-flat name->array dict),
+flattens it to "a/b/c" names, applies the policy per tensor, quantizes
+what the policy selects, entropy-codes into one DCBC container and
+returns an :class:`Artifact`.  ``decompress`` is codec-independent — the
+container is self-describing — and optionally rebuilds the original tree
+structure (with dtype restore, incl. bfloat16) from a template.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from ..core.codec import compressed_size_report, decode_state_dict
+from ..core.container import ContainerWriter
+from .artifact import Artifact
+from .coders import EntropyCoder
+from .quantizers import Quantizer
+from .tree import flatten_tree, unflatten_like
+
+
+def decompress(blob: bytes, like=None, dequantize: bool = True):
+    """Decode any codec's container.
+
+    Returns the flat ``{"a/b/c": ndarray}`` dict, or — given ``like``, a
+    template pytree — the rebuilt tree with each leaf cast to the
+    template's dtype.  ``dequantize=False`` yields the quantized
+    representations instead of reconstructed arrays.
+    """
+    flat = decode_state_dict(blob, dequantize=dequantize)
+    if like is None:
+        return flat
+    return unflatten_like(flat, like)
+
+
+@dataclass
+class Codec:
+    name: str
+    coder: EntropyCoder | None = None       # None => raw-only codec
+    quantizer: Quantizer | None = None      # None => everything raw
+    policy: Callable[[str, np.ndarray], bool] | None = None
+    hyperparams: dict = field(default_factory=dict)
+
+    def quantize_entries(self, tree) -> dict:
+        """Flatten + per-tensor policy + quantize; raw leaves pass through."""
+        entries: dict = {}
+        for name, w in flatten_tree(tree).items():
+            if (self.quantizer is not None and w.size > 0
+                    and (self.policy is None or self.policy(name, w))):
+                entries[name] = self.quantizer.quantize(name, w)
+            else:
+                entries[name] = w
+        return entries
+
+    def compress(self, tree) -> Artifact:
+        entries = self.quantize_entries(tree)
+        writer = ContainerWriter()
+        for name, e in entries.items():
+            if isinstance(e, np.ndarray):
+                writer.add_raw(name, e)
+            elif self.coder is None:
+                raise ValueError(
+                    f"codec {self.name!r} quantized {name} but has no "
+                    f"entropy coder")
+            else:
+                self.coder.add_record(writer, name, e)
+        blob = writer.tobytes()
+        return Artifact(blob=blob,
+                        report=compressed_size_report(entries, blob),
+                        hyperparams={"codec": self.name, **self.hyperparams},
+                        quantized=entries)
+
+    def decompress(self, blob: bytes, like=None, dequantize: bool = True):
+        return decompress(blob, like=like, dequantize=dequantize)

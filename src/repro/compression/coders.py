@@ -1,0 +1,75 @@
+"""EntropyCoder strategies: quantized tensor -> DCBC container record.
+
+Decoding needs no strategy object — container records are self-describing
+and ``repro.core.codec.decode_state_dict`` handles every encoding.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core import binarization as B
+from ..core.codec import (DEFAULT_CHUNK, Q8Tensor, QuantizedTensor,
+                          encode_level_chunks)
+from ..core.container import ContainerWriter
+from ..core.huffman import build_huffman, pack_payload
+
+
+class EntropyCoder:
+    """Strategy interface: append one quantized tensor to a container."""
+
+    def add_record(self, writer: ContainerWriter, name: str,
+                   qt: QuantizedTensor | Q8Tensor) -> None:
+        raise NotImplementedError
+
+
+@dataclass
+class CabacCoder(EntropyCoder):
+    """Chunk-parallel context-adaptive binary arithmetic coding — the
+    paper's coder; chunks decode independently for multi-host restores."""
+
+    num_gr: int = B.DEFAULT_NUM_GR
+    chunk_size: int = DEFAULT_CHUNK
+
+    def add_record(self, writer, name, qt):
+        if not isinstance(qt, QuantizedTensor):
+            raise TypeError(
+                f"CabacCoder codes scalar-step levels, got {type(qt).__name__}")
+        chunks = encode_level_chunks(qt.levels, self.num_gr, self.chunk_size)
+        writer.add_cabac(name, qt.dtype, qt.shape, qt.step,
+                         self.num_gr, self.chunk_size, chunks)
+
+
+@dataclass
+class HuffmanCoder(EntropyCoder):
+    """Canonical scalar Huffman baseline (paper §IV-B-2) with the two-part
+    code table transmitted in-band ahead of the bitstream.
+
+    This is the *benchmark baseline* coder: the per-symbol Python
+    encode/decode loops are fine for the paper-table fixtures but orders
+    of magnitude slower than CABAC's chunked path on real model sizes —
+    don't point CheckpointManager at it for large states.
+    """
+
+    def add_record(self, writer, name, qt):
+        if not isinstance(qt, QuantizedTensor):
+            raise TypeError(
+                f"HuffmanCoder codes scalar-step levels, got {type(qt).__name__}")
+        flat = np.asarray(qt.levels).ravel()
+        payload = pack_payload(flat, build_huffman(flat))
+        writer.add_huffman(name, qt.dtype, qt.shape, qt.step, payload)
+
+
+@dataclass
+class RawLevelCoder(EntropyCoder):
+    """Raw passthrough of int8 levels + per-channel scales — no entropy
+    coding; the serving artifact wants mmap-friendly fixed-point payloads."""
+
+    def add_record(self, writer, name, qt):
+        if not isinstance(qt, Q8Tensor):
+            raise TypeError(
+                f"RawLevelCoder stores int8 per-channel tensors, "
+                f"got {type(qt).__name__}")
+        writer.add_q8(name, qt.dtype, qt.levels, qt.scale)

@@ -1,0 +1,62 @@
+"""Shared int8 block-quantization primitives.
+
+The quantize-where-you-store recipe used by the 8-bit AdamW moments, the
+error-feedback gradient stream and the cross-pod collectives: int8 codes
+with per-block (``Q8_BLOCK`` along the last axis) absmax scales.  Lives
+here so ``optim``, ``distributed`` and ``serve`` all pull one
+implementation instead of reaching into each other's privates.
+
+All ops are elementwise/jit-friendly and shard trivially under pjit
+(scales inherit the blocking of the last axis).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Q8_BLOCK = 128
+
+
+def q8_blockable(shape: tuple[int, ...]) -> bool:
+    return len(shape) >= 1 and shape[-1] % Q8_BLOCK == 0
+
+
+def q8_encode(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x -> (int8 codes, float32 blockwise scales)."""
+    if q8_blockable(x.shape):
+        b = x.reshape(*x.shape[:-1], x.shape[-1] // Q8_BLOCK, Q8_BLOCK)
+        scale = jnp.max(jnp.abs(b), axis=-1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        codes = jnp.clip(jnp.round(b / scale), -127, 127).astype(jnp.int8)
+        return codes.reshape(x.shape), scale.squeeze(-1).astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def q8_decode(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    if codes.ndim >= 1 and codes.shape[-1] % Q8_BLOCK == 0 and \
+            scale.ndim == codes.ndim:
+        b = codes.reshape(*codes.shape[:-1],
+                          codes.shape[-1] // Q8_BLOCK, Q8_BLOCK)
+        return (b.astype(jnp.float32) * scale[..., None]).reshape(codes.shape)
+    return codes.astype(jnp.float32) * scale
+
+
+def q8_encode_sqrt(v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Second moment in sqrt-space: v spans many orders of magnitude, so
+    linear absmax codes flush small entries to zero and destabilize
+    1/sqrt(v).  Quantizing sqrt(v) halves the dynamic range in log terms —
+    the same trick 8-bit optimizers use via nonlinear quantization maps."""
+    return q8_encode(jnp.sqrt(jnp.maximum(v, 0.0)))
+
+
+def q8_decode_sqrt(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    r = q8_decode(codes, scale)
+    return jnp.square(r)
+
+
+def q8_scale_shape(shape: tuple[int, ...]) -> tuple[int, ...]:
+    if q8_blockable(shape):
+        return (*shape[:-1], shape[-1] // Q8_BLOCK)
+    return ()

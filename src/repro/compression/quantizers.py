@@ -1,0 +1,173 @@
+"""Quantizer strategies + per-tensor policies for the Codec API.
+
+A quantizer maps one full-precision tensor to a quantized representation
+(``QuantizedTensor`` for scalar-step equidistant grids, ``Q8Tensor`` for
+per-channel int8); a policy decides per flat-named leaf whether to
+quantize at all (1-D biases/norms and integer leaves stay raw, as in the
+paper's protocol).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import binarization as B
+from ..core.codec import Q8Tensor, QuantizedTensor
+from ..core.deepcabac import quantize_tensor_rd
+from ..core.quant import nearest_level
+
+# ---------------------------------------------------------------------------
+# Per-tensor policies
+# ---------------------------------------------------------------------------
+
+STACKED_TOP_KEYS = ("layers", "dense_layers")
+
+
+def is_float_dtype(dt) -> bool:
+    """True for any float dtype incl. ml_dtypes extensions (bfloat16...)."""
+    return bool(jnp.issubdtype(np.dtype(dt), jnp.floating))
+
+
+def ndim_float_policy(min_ndim: int = 2) -> Callable[[str, np.ndarray], bool]:
+    """Quantize float tensors of rank >= min_ndim; everything else raw."""
+    def policy(name: str, w: np.ndarray) -> bool:
+        return w.ndim >= min_ndim and is_float_dtype(w.dtype)
+    return policy
+
+
+def serve_q8_policy(name: str, w: np.ndarray) -> bool:
+    """The serving rule: stacked layer tensors (ndim >= 3 — per-layer
+    vectors stack to 2-D and stay full precision) and the unstacked 2-D
+    embed/head matrices."""
+    top = name.split("/", 1)[0]
+    stacked = top in STACKED_TOP_KEYS
+    return is_float_dtype(w.dtype) and (
+        (stacked and w.ndim >= 3) or (not stacked and w.ndim == 2))
+
+
+# ---------------------------------------------------------------------------
+# Quantizer strategies
+# ---------------------------------------------------------------------------
+
+class Quantizer:
+    """Strategy interface: one tensor -> quantized representation."""
+
+    def quantize(self, name: str,
+                 w: np.ndarray) -> QuantizedTensor | Q8Tensor:
+        raise NotImplementedError
+
+
+@dataclass
+class RDGridQuantizer(Quantizer):
+    """Rate-distortion assignment on the equidistant grid (paper eq. 11).
+
+    DC-v2 shape: a global ``delta``.  DC-v1 shape: pass ``step_for`` (the
+    per-layer eq. 12 step) and an ``importance`` dict (F_i = 1/sigma^2)
+    keyed by flat tensor name.
+    """
+
+    delta: float = 0.01
+    lam: float = 0.0
+    num_gr: int = B.DEFAULT_NUM_GR
+    step_for: Callable[[str, np.ndarray], float] | None = None
+    importance: dict | None = None
+
+    def quantize(self, name: str, w: np.ndarray) -> QuantizedTensor:
+        w = np.asarray(w)
+        step = (self.delta if self.step_for is None
+                else float(self.step_for(name, w)))
+        fim = (None if self.importance is None
+               else np.asarray(self.importance[name]))
+        return quantize_tensor_rd(w, step, self.lam, fim, num_gr=self.num_gr)
+
+
+def relative_step(w: np.ndarray, delta_rel: float,
+                  min_step: float = 1e-12) -> float:
+    """Per-tensor grid step Delta = delta_rel * std(w).
+
+    (Near-)constant tensors fall back to Delta = delta_rel * max|w|: a
+    vanishing std would put a constant-0.5 tensor at level ~5e11,
+    overflowing the Huffman symbol range and ballooning the CABAC stream
+    for zero accuracy gain.  The floor is relative (std vs 1e-6 * max|w|)
+    so constant-up-to-noise tensors are caught too, not just exact ties.
+    """
+    wf = np.asarray(w, dtype=np.float64)   # no copy when already float64
+    if wf.size == 0:
+        return min_step
+    std = float(wf.std())
+    amax = float(np.abs(wf).max())
+    scale = std if std > 1e-6 * amax else amax
+    return max(delta_rel * scale, min_step)
+
+
+@dataclass
+class NearestStdQuantizer(Quantizer):
+    """Nearest-level on the per-tensor :func:`relative_step` grid — the
+    deterministic checkpoint quantizer (bit-reproducible resumes)."""
+
+    delta_rel: float = 1e-3
+    min_step: float = 1e-12
+
+    def quantize(self, name: str, w: np.ndarray) -> QuantizedTensor:
+        w = np.asarray(w)
+        wf = w.astype(np.float64)        # one conversion, shared below
+        step = relative_step(wf, self.delta_rel, self.min_step)
+        levels = nearest_level(wf.ravel(), step).reshape(w.shape)
+        return QuantizedTensor(levels, step, str(w.dtype))
+
+
+def quantize_leaf(w: jnp.ndarray) -> dict:
+    """Per-output-channel (last dim) symmetric int8 on the DeepCABAC grid.
+
+    Stacked (L, ..., out) tensors keep a per-layer leading dim on the scale
+    so the layer scan can slice codes and scales together."""
+    wf = w.astype(jnp.float32)
+    if w.ndim >= 3:
+        axes = tuple(range(1, w.ndim - 1))
+        scale = jnp.max(jnp.abs(wf), axis=axes, keepdims=True)  # (L,1..,out)
+        q = jnp.clip(jnp.round(wf / jnp.maximum(scale / 127.0, 1e-12)),
+                     -127, 127).astype(jnp.int8)
+        scale_out = jnp.maximum(scale.reshape(w.shape[0], w.shape[-1])
+                                / 127.0, 1e-12)
+        return {"q8": q, "q8s": scale_out.astype(jnp.float32)}
+    scale = jnp.maximum(jnp.max(jnp.abs(wf), axis=tuple(
+        range(w.ndim - 1))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return {"q8": q, "q8s": scale.astype(jnp.float32)}
+
+
+def quantize_tree_q8(params):
+    """The serving tree pass: int8-quantize the matmul weights in place,
+    leaving every other leaf untouched ({"q8","q8s"} leaf dicts).  Leaf
+    selection delegates to :func:`serve_q8_policy` so this path and the
+    "serve-q8" container codec can never drift apart."""
+    from .tree import _path_key
+
+    def visit(path, leaf):
+        if not hasattr(leaf, "ndim") or not hasattr(leaf, "dtype"):
+            return leaf
+        if serve_q8_policy(_path_key(path), leaf):
+            return quantize_leaf(leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+@dataclass
+class PerChannelInt8Quantizer(Quantizer):
+    """Per-output-channel symmetric int8 (the serving representation),
+    sharing :func:`quantize_leaf` with the in-memory tree pass so the
+    container path and the serving path agree bit-for-bit."""
+
+    def quantize(self, name: str, w: np.ndarray) -> Q8Tensor:
+        arr = np.asarray(w)
+        # host-side container path: keep the shared jnp math on CPU so an
+        # (async) checkpoint save never bounces weights off the accelerator
+        with jax.default_device(jax.devices("cpu")[0]):
+            q = quantize_leaf(jnp.asarray(arr))
+            levels, scale = np.asarray(q["q8"]), np.asarray(q["q8s"])
+        return Q8Tensor(levels=levels, scale=scale, dtype=str(arr.dtype))

@@ -1,0 +1,119 @@
+"""String registry of codec factories: ``get("deepcabac-v2", delta=...)``.
+
+Factories take keyword overrides so call sites tune the hyperparameters
+without re-plumbing quantizer/coder objects.  New coders/backends plug in
+here via :func:`register` without touching any call site.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Callable
+
+from ..core import binarization as B
+from ..core.codec import DEFAULT_CHUNK
+from .coders import CabacCoder, HuffmanCoder, RawLevelCoder
+from .codec import Codec
+from .quantizers import (NearestStdQuantizer, PerChannelInt8Quantizer,
+                         RDGridQuantizer, ndim_float_policy, relative_step,
+                         serve_q8_policy)
+
+_REGISTRY: dict[str, Callable[..., Codec]] = {}
+
+
+def register(name: str, factory: Callable[..., Codec]) -> None:
+    _REGISTRY[name] = factory
+
+
+def available() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get(name: str, **overrides) -> Codec:
+    """Build a registered codec, applying keyword overrides to its factory."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown codec {name!r}; available: {available()}")
+    return _REGISTRY[name](**overrides)
+
+
+def make(name: str, **overrides) -> Codec:
+    """Like :func:`get`, but drops overrides the factory doesn't accept —
+    for callers forwarding one generic config at a user-chosen codec
+    (e.g. CheckpointConfig.delta_rel is meaningful for ckpt-nearest and
+    huffman but not for serve-q8/raw)."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown codec {name!r}; available: {available()}")
+    factory = _REGISTRY[name]
+    params = inspect.signature(factory).parameters
+    return factory(**{k: v for k, v in overrides.items() if k in params})
+
+
+# ---------------------------------------------------------------------------
+# Built-in codecs
+# ---------------------------------------------------------------------------
+
+def _deepcabac_v2(delta: float = 0.01, lam: float = 0.0,
+                  num_gr: int = B.DEFAULT_NUM_GR, min_ndim: int = 2,
+                  chunk_size: int = DEFAULT_CHUNK,
+                  delta_rel: float | None = None) -> Codec:
+    """Paper DC-v2: global-Delta RD grid (eq. 11) + chunk-parallel CABAC.
+
+    ``delta_rel`` switches the grid to the per-tensor relative step
+    Delta = delta_rel * std(w) (overriding ``delta``) so callers with a
+    relative-step config — e.g. CheckpointConfig — keep their semantics."""
+    if delta_rel is not None:
+        quantizer = RDGridQuantizer(
+            lam=lam, num_gr=num_gr,
+            step_for=lambda name, w: relative_step(w, delta_rel))
+        hyperparams = {"delta_rel": delta_rel, "lam": lam, "num_gr": num_gr}
+    else:
+        quantizer = RDGridQuantizer(delta=delta, lam=lam, num_gr=num_gr)
+        hyperparams = {"delta": delta, "lam": lam, "num_gr": num_gr}
+    return Codec("deepcabac-v2",
+                 coder=CabacCoder(num_gr=num_gr, chunk_size=chunk_size),
+                 quantizer=quantizer,
+                 policy=ndim_float_policy(min_ndim),
+                 hyperparams=hyperparams)
+
+
+def _ckpt_nearest(delta_rel: float = 1e-3, min_ndim: int = 2,
+                  num_gr: int = B.DEFAULT_NUM_GR,
+                  chunk_size: int = DEFAULT_CHUNK) -> Codec:
+    """Checkpoint codec: deterministic nearest-level on Delta =
+    delta_rel * std(w) + CABAC (bit-reproducible resumes)."""
+    return Codec("ckpt-nearest",
+                 coder=CabacCoder(num_gr=num_gr, chunk_size=chunk_size),
+                 quantizer=NearestStdQuantizer(delta_rel=delta_rel),
+                 policy=ndim_float_policy(min_ndim),
+                 hyperparams={"delta_rel": delta_rel})
+
+
+def _serve_q8() -> Codec:
+    """Fixed-point serving artifact: per-out-channel symmetric int8 levels
+    + scales, stored raw (mmap-friendly, decode-free load)."""
+    return Codec("serve-q8",
+                 coder=RawLevelCoder(),
+                 quantizer=PerChannelInt8Quantizer(),
+                 policy=serve_q8_policy)
+
+
+def _huffman(delta_rel: float = 1e-3, min_ndim: int = 2) -> Codec:
+    """Scalar Huffman baseline (paper §IV-B-2): same nearest-level grid as
+    the checkpoint codec, coded with an explicit two-part Huffman code."""
+    return Codec("huffman",
+                 coder=HuffmanCoder(),
+                 quantizer=NearestStdQuantizer(delta_rel=delta_rel),
+                 policy=ndim_float_policy(min_ndim),
+                 hyperparams={"delta_rel": delta_rel})
+
+
+def _raw() -> Codec:
+    """Lossless passthrough — every leaf stored verbatim."""
+    return Codec("raw")
+
+
+register("deepcabac-v2", _deepcabac_v2)
+register("ckpt-nearest", _ckpt_nearest)
+register("serve-q8", _serve_q8)
+register("huffman", _huffman)
+register("raw", _raw)

@@ -1,0 +1,49 @@
+"""Pytree <-> flat ``{"a/b/c": ndarray}`` mapping used by every codec.
+
+Flat names join the jax key path with "/"; a dict that is already flat
+maps through unchanged (its keys contain no nested structure).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def _path_key(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(k.key) if hasattr(k, "key") else str(k.idx))
+    return "/".join(parts)
+
+
+def flatten_tree(tree) -> dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out[_path_key(path)] = np.asarray(leaf)
+    return out
+
+
+def unflatten_like(flat: dict[str, np.ndarray], template):
+    """Rebuild ``template``'s structure from a flat dict, restoring each
+    leaf's dtype (incl. bfloat16) and checking shapes.  Quantized
+    representations (anything with ``dequantize``, from a
+    ``dequantize=False`` decode) are placed as-is — their ``dtype`` field
+    already records the reconstruction dtype."""
+    leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in leaves_t:
+        key = _path_key(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing tensor {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != state "
+                f"{np.shape(leaf)}")
+        if hasattr(arr, "dequantize"):
+            leaves.append(arr)
+        else:
+            leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)

@@ -1,8 +1,10 @@
 """Tensor / pytree encode-decode API on top of the CABAC engine.
 
-This is the public surface used by checkpointing, the serving loader and the
-examples: quantized integer levels <-> chunk-parallel CABAC bitstreams packed
-into a DCBC container.
+This is the low-level surface the ``repro.compression`` Codec API builds
+on: quantized integer levels <-> entropy-coded bitstreams packed into a
+DCBC container.  Decoding is codec-independent — the container records
+are self-describing, so :func:`decode_state_dict` restores any blob a
+registered codec produced (CABAC, Huffman, raw int8 + scales, raw).
 """
 
 from __future__ import annotations
@@ -13,7 +15,8 @@ import numpy as np
 
 from . import binarization as B
 from .cabac import RangeDecoder, RangeEncoder
-from .container import ENC_CABAC, ENC_RAW, ContainerReader, ContainerWriter
+from .container import (ENC_CABAC, ENC_HUFF, ENC_Q8, ENC_RAW,
+                        ContainerReader, ContainerWriter)
 
 DEFAULT_CHUNK = 1 << 16
 
@@ -38,6 +41,31 @@ class QuantizedTensor:
     def dequantize(self) -> np.ndarray:
         return (self.levels.astype(np.float64) * self.step).astype(
             resolve_dtype(self.dtype))
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.levels.shape)
+
+
+@dataclass
+class Q8Tensor:
+    """int8 levels with per-channel scales q = scale[..., c] * level.
+
+    The fixed-point serving representation: ``scale`` is per-out-channel
+    (last dim); stacked (L, ..., out) tensors carry an (L, out) scale so a
+    layer scan can slice levels and scales together.
+    """
+
+    levels: np.ndarray            # int8, original shape
+    scale: np.ndarray             # float32, (out,) or (L, out)
+    dtype: str = "float32"        # reconstruction dtype
+
+    def dequantize(self) -> np.ndarray:
+        s = np.asarray(self.scale, dtype=np.float32)
+        lv = self.levels
+        if lv.ndim >= 3 and s.ndim == 2:
+            s = s.reshape(s.shape[0], *([1] * (lv.ndim - 2)), s.shape[-1])
+        return (lv.astype(np.float32) * s).astype(resolve_dtype(self.dtype))
 
     @property
     def shape(self) -> tuple[int, ...]:
@@ -82,14 +110,16 @@ def encode_state_dict(entries: dict[str, QuantizedTensor | np.ndarray],
             chunks = encode_level_chunks(entry.levels, num_gr, chunk_size)
             w.add_cabac(name, entry.dtype, entry.shape, entry.step,
                         num_gr, chunk_size, chunks)
+        elif isinstance(entry, Q8Tensor):
+            w.add_q8(name, entry.dtype, entry.levels, entry.scale)
         else:
             w.add_raw(name, np.asarray(entry))
     return w.tobytes()
 
 
 def decode_state_dict(data: bytes, dequantize: bool = True
-                      ) -> dict[str, np.ndarray | QuantizedTensor]:
-    out: dict[str, np.ndarray | QuantizedTensor] = {}
+                      ) -> dict[str, np.ndarray | QuantizedTensor | Q8Tensor]:
+    out: dict[str, np.ndarray | QuantizedTensor | Q8Tensor] = {}
     for hdr, payload in ContainerReader(data):
         if hdr.encoding == ENC_RAW:
             out[hdr.name] = np.frombuffer(
@@ -105,23 +135,45 @@ def decode_state_dict(data: bytes, dequantize: bool = True
                 chunks, count, hdr.num_gr, hdr.chunk_size).reshape(hdr.shape)
             qt = QuantizedTensor(levels=levels, step=hdr.step, dtype=hdr.dtype)
             out[hdr.name] = qt.dequantize() if dequantize else qt
+        elif hdr.encoding == ENC_HUFF:
+            from .huffman import unpack_payload
+            count = int(np.prod(hdr.shape)) if hdr.shape else 1
+            levels = unpack_payload(payload, count).reshape(hdr.shape)
+            qt = QuantizedTensor(levels=levels, step=hdr.step, dtype=hdr.dtype)
+            out[hdr.name] = qt.dequantize() if dequantize else qt
+        elif hdr.encoding == ENC_Q8:
+            sc_count = int(np.prod(hdr.scale_shape)) if hdr.scale_shape else 1
+            scale = np.frombuffer(payload, dtype="<f4",
+                                  count=sc_count).reshape(
+                                      hdr.scale_shape).copy()
+            levels = np.frombuffer(payload, dtype=np.int8,
+                                   offset=4 * sc_count).reshape(
+                                       hdr.shape).copy()
+            q8 = Q8Tensor(levels=levels, scale=scale, dtype=hdr.dtype)
+            out[hdr.name] = q8.dequantize() if dequantize else q8
         else:
             raise ValueError(f"unknown encoding {hdr.encoding}")
     return out
 
 
-def compressed_size_report(entries: dict[str, QuantizedTensor | np.ndarray],
-                           blob: bytes) -> dict[str, float]:
-    """Bits/param + ratio vs. the fp32 footprint (paper's 'Org. size')."""
+def compressed_size_report(entries: dict, blob: bytes) -> dict[str, float]:
+    """Bits/param + ratio vs. the *original-dtype* footprint (the paper's
+    'Org. size'; bf16/fp16 state dicts count 2 bytes/param, not 4)."""
     n_params = 0
+    orig_bytes = 0
     for e in entries.values():
-        n_params += int(np.prod(e.levels.shape if isinstance(
-            e, QuantizedTensor) else np.asarray(e).shape))
-    orig_bytes = 4 * n_params
+        if hasattr(e, "levels"):           # QuantizedTensor | Q8Tensor
+            n = int(np.prod(e.levels.shape))
+            nb = n * resolve_dtype(e.dtype).itemsize
+        else:
+            arr = np.asarray(e)
+            n, nb = arr.size, arr.nbytes
+        n_params += n
+        orig_bytes += nb
     return {
         "params": float(n_params),
         "orig_mb": orig_bytes / 2**20,
         "compressed_mb": len(blob) / 2**20,
-        "ratio_pct": 100.0 * len(blob) / orig_bytes,
+        "ratio_pct": 100.0 * len(blob) / max(orig_bytes, 1),
         "bits_per_param": 8.0 * len(blob) / max(n_params, 1),
     }

@@ -5,13 +5,24 @@ Layout (little-endian):
     magic 'DCBC' | version u16 | num_records u32
     per record:
       name: u16 len + utf8
-      encoding: u8         (0 = raw bytes, 1 = cabac levels)
+      encoding: u8         (0 = raw bytes, 1 = cabac levels,
+                            2 = huffman levels, 3 = int8 levels + scales)
       dtype str: u8 len + ascii   (original array dtype)
       ndim u8, dims u32[ndim]
       if encoding == 1:
         step f64 | num_gr u8 | chunk_size u32 | num_chunks u32
         chunk_byte_lens u32[num_chunks]
+      if encoding == 2:
+        step f64             (payload: self-describing table + bitstream)
+      if encoding == 3:
+        scale_ndim u8, scale_dims u32[scale_ndim]
+                             (payload: f32 scales then int8 levels)
       payload_len u64 | payload
+
+Version 1 containers hold only raw/cabac records; version 2 adds the
+huffman and q8 encodings.  The writer emits version 1 whenever no v2
+record type is present, so pre-existing readers and blobs stay
+byte-compatible on the common path.
 
 Chunks are independently decodable (fresh context state per chunk) so a
 multi-host restore can fan decode out across hosts/processes; the rate cost
@@ -27,8 +38,11 @@ import numpy as np
 
 MAGIC = b"DCBC"
 VERSION = 1
+VERSION_V2 = 2
 ENC_RAW = 0
 ENC_CABAC = 1
+ENC_HUFF = 2
+ENC_Q8 = 3
 
 
 @dataclass
@@ -41,6 +55,7 @@ class RecordHeader:
     num_gr: int = 0
     chunk_size: int = 0
     chunk_lens: tuple[int, ...] = ()
+    scale_shape: tuple[int, ...] = ()
 
 
 def _pack_str(s: str, lenfmt: str) -> bytes:
@@ -51,6 +66,7 @@ def _pack_str(s: str, lenfmt: str) -> bytes:
 class ContainerWriter:
     def __init__(self):
         self._records: list[bytes] = []
+        self._needs_v2 = False
 
     def add_raw(self, name: str, arr: np.ndarray) -> None:
         payload = np.ascontiguousarray(arr).tobytes()
@@ -74,8 +90,39 @@ class ContainerWriter:
                              *[len(c) for c in chunk_payloads]))
         self._records.append(hdr + struct.pack("<Q", len(payload)) + payload)
 
+    def add_huffman(self, name: str, dtype: str, shape: tuple[int, ...],
+                    step: float, payload: bytes) -> None:
+        """Canonical-Huffman-coded levels; the payload carries its own
+        two-part code table (symbols + lengths) ahead of the bitstream."""
+        ndim = len(shape)
+        hdr = (_pack_str(name, "<H") + struct.pack("<B", ENC_HUFF)
+               + _pack_str(dtype, "<B")
+               + struct.pack("<B", ndim) + struct.pack(f"<{ndim}I", *shape)
+               + struct.pack("<d", step))
+        self._records.append(hdr + struct.pack("<Q", len(payload)) + payload)
+        self._needs_v2 = True
+
+    def add_q8(self, name: str, dtype: str, levels: np.ndarray,
+               scale: np.ndarray) -> None:
+        """Raw int8 levels with per-channel f32 scales (fixed-point serving)."""
+        levels = np.ascontiguousarray(levels)
+        if levels.dtype != np.int8:
+            raise TypeError(f"q8 levels must be int8, got {levels.dtype}")
+        scale = np.ascontiguousarray(scale, dtype="<f4")   # explicit LE,
+        # matching the reader and the container's documented layout
+        hdr = (_pack_str(name, "<H") + struct.pack("<B", ENC_Q8)
+               + _pack_str(dtype, "<B")
+               + struct.pack("<B", levels.ndim)
+               + struct.pack(f"<{levels.ndim}I", *levels.shape)
+               + struct.pack("<B", scale.ndim)
+               + struct.pack(f"<{scale.ndim}I", *scale.shape))
+        payload = scale.tobytes() + levels.tobytes()
+        self._records.append(hdr + struct.pack("<Q", len(payload)) + payload)
+        self._needs_v2 = True
+
     def tobytes(self) -> bytes:
-        head = MAGIC + struct.pack("<HI", VERSION, len(self._records))
+        version = VERSION_V2 if self._needs_v2 else VERSION
+        head = MAGIC + struct.pack("<HI", version, len(self._records))
         return head + b"".join(self._records)
 
 
@@ -84,7 +131,7 @@ class ContainerReader:
         if data[:4] != MAGIC:
             raise ValueError("not a DCBC container")
         version, self.num_records = struct.unpack_from("<HI", data, 4)
-        if version != VERSION:
+        if version not in (VERSION, VERSION_V2):
             raise ValueError(f"unsupported container version {version}")
         self._data = data
         self._offset = 10
@@ -102,13 +149,22 @@ class ContainerReader:
             shape = struct.unpack_from(f"<{ndim}I", data, off); off += 4 * ndim
             step, num_gr, chunk_size, nchunks = 0.0, 0, 0, 0
             chunk_lens: tuple[int, ...] = ()
+            scale_shape: tuple[int, ...] = ()
             if enc == ENC_CABAC:
                 step, num_gr, chunk_size, nchunks = struct.unpack_from(
                     "<dBII", data, off)
                 off += 17
                 chunk_lens = struct.unpack_from(f"<{nchunks}I", data, off)
                 off += 4 * nchunks
+            elif enc == ENC_HUFF:
+                (step,) = struct.unpack_from("<d", data, off)
+                off += 8
+            elif enc == ENC_Q8:
+                (sndim,) = struct.unpack_from("<B", data, off); off += 1
+                scale_shape = struct.unpack_from(f"<{sndim}I", data, off)
+                off += 4 * sndim
             (plen,) = struct.unpack_from("<Q", data, off); off += 8
             payload = data[off:off + plen]; off += plen
             yield RecordHeader(name, enc, dtype, tuple(shape), step, num_gr,
-                               chunk_size, chunk_lens), payload
+                               chunk_size, chunk_lens, tuple(scale_shape)), \
+                payload

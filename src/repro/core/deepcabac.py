@@ -13,13 +13,13 @@ F_i = 1.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
 
 from . import binarization as B
-from .codec import QuantizedTensor, compressed_size_report, encode_state_dict
+from ..compression.artifact import Artifact
+from .codec import QuantizedTensor
 from .quant import nearest_level, rd_assign
 from .rate_model import build_rate_table, estimate_bin_probs
 
@@ -62,64 +62,50 @@ def quantize_tensor_rd(w: np.ndarray, step: float, lam: float,
                            step=step, dtype=str(np.asarray(w).dtype))
 
 
-@dataclass
-class CompressionResult:
-    blob: bytes
-    report: dict
-    hyperparams: dict
-    quantized: dict = field(repr=False, default_factory=dict)
-
-    def reconstructed(self) -> dict[str, np.ndarray]:
-        out = {}
-        for k, v in self.quantized.items():
-            out[k] = v.dequantize() if isinstance(v, QuantizedTensor) else v
-        return out
+class CompressionResult(Artifact):
+    """DC-v1/v2 result — the shared :class:`repro.compression.Artifact`
+    under its historical name (blob + report + quantized entries)."""
 
 
-def _quantize_state_dict(params: dict[str, np.ndarray], step_for: Callable,
-                         lam: float, importance: dict | None,
-                         num_gr: int) -> dict:
-    entries: dict[str, QuantizedTensor | np.ndarray] = {}
-    for name, w in params.items():
-        w = np.asarray(w)
-        if w.ndim < QUANT_MIN_NDIM:
-            entries[name] = w
-            continue
-        fim = None if importance is None else np.asarray(importance[name])
-        entries[name] = quantize_tensor_rd(
-            w, step_for(name, w), lam, fim, num_gr=num_gr)
-    return entries
-
-
-def compress_dc_v2(params: dict[str, np.ndarray], delta: float, lam: float,
+def compress_dc_v2(params, delta: float, lam: float,
                    num_gr: int = B.DEFAULT_NUM_GR) -> CompressionResult:
     """One (Delta, lambda) point of DC-v2 (F_i = 1, global step)."""
-    entries = _quantize_state_dict(params, lambda n, w: delta, lam, None,
-                                   num_gr)
-    blob = encode_state_dict(entries, num_gr)
+    from ..compression import get
+    art = get("deepcabac-v2", delta=delta, lam=lam, num_gr=num_gr,
+              min_ndim=QUANT_MIN_NDIM).compress(params)
     return CompressionResult(
-        blob=blob, report=compressed_size_report(entries, blob),
-        hyperparams={"method": "dc-v2", "delta": delta, "lam": lam},
-        quantized=entries)
+        blob=art.blob, report=art.report,
+        hyperparams={"method": "dc-v2", "delta": delta, "lam": lam,
+                     "codec": "deepcabac-v2"},
+        quantized=art.quantized)
 
 
-def compress_dc_v1(params: dict[str, np.ndarray], sigma: dict[str, np.ndarray],
-                   s: float, lam: float,
+def compress_dc_v1(params, sigma, s: float, lam: float,
                    num_gr: int = B.DEFAULT_NUM_GR) -> CompressionResult:
     """One (S, lambda) point of DC-v1: per-layer Delta via eq. 12,
     F_i = 1/sigma_i^2."""
+    from ..compression import (Codec, CabacCoder, RDGridQuantizer,
+                               flatten_tree, ndim_float_policy)
+    flat_sigma = flatten_tree(sigma)
+
     def step_for(name, w):
         return dc_v1_step_size(np.abs(w).max(),
-                               float(np.min(np.asarray(sigma[name]))), s)
+                               float(np.min(flat_sigma[name])), s)
 
     importance = {k: 1.0 / (np.asarray(v) ** 2 + 1e-24)
-                  for k, v in sigma.items()}
-    entries = _quantize_state_dict(params, step_for, lam, importance, num_gr)
-    blob = encode_state_dict(entries, num_gr)
+                  for k, v in flat_sigma.items()}
+    codec = Codec("deepcabac-v1",
+                  coder=CabacCoder(num_gr=num_gr),
+                  quantizer=RDGridQuantizer(lam=lam, num_gr=num_gr,
+                                            step_for=step_for,
+                                            importance=importance),
+                  policy=ndim_float_policy(QUANT_MIN_NDIM))
+    art = codec.compress(params)
     return CompressionResult(
-        blob=blob, report=compressed_size_report(entries, blob),
-        hyperparams={"method": "dc-v1", "S": s, "lam": lam},
-        quantized=entries)
+        blob=art.blob, report=art.report,
+        hyperparams={"method": "dc-v1", "S": s, "lam": lam,
+                     "codec": "deepcabac-v1"},
+        quantized=art.quantized)
 
 
 # ---------------------------------------------------------------------------

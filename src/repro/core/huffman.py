@@ -25,9 +25,27 @@ class HuffmanCode:
         return int(self.symbols.size * (32 + 8))
 
 
+def canonical_codes(vals: np.ndarray,
+                    lengths: np.ndarray) -> dict[int, tuple[int, int]]:
+    """Canonical code assignment from (symbol, length) pairs — the part of
+    the two-part code a decoder rebuilds from the transmitted header."""
+    order = np.lexsort((vals, lengths))
+    codes: dict[int, tuple[int, int]] = {}
+    code, prev_len = 0, 0
+    for idx in order:
+        ln = int(lengths[idx])
+        code <<= (ln - prev_len)
+        codes[int(vals[idx])] = (code, ln)
+        code += 1
+        prev_len = ln
+    return codes
+
+
 def build_huffman(values: np.ndarray) -> HuffmanCode:
     vals, counts = np.unique(np.asarray(values).ravel(), return_counts=True)
-    if vals.size == 1:
+    if vals.size == 0:
+        lengths = np.zeros(0, dtype=np.int64)
+    elif vals.size == 1:
         lengths = np.array([1])
     else:
         # heap of (count, tiebreak, node); node = symbol index or [l, r]
@@ -49,17 +67,8 @@ def build_huffman(values: np.ndarray) -> HuffmanCode:
                 lengths[node] = max(depth, 1)
         walk(heap[0][2], 0)
 
-    # canonical code assignment from lengths
-    order = np.lexsort((vals, lengths))
-    codes: dict[int, tuple[int, int]] = {}
-    code, prev_len = 0, 0
-    for idx in order:
-        ln = int(lengths[idx])
-        code <<= (ln - prev_len)
-        codes[int(vals[idx])] = (code, ln)
-        code += 1
-        prev_len = ln
-    return HuffmanCode(symbols=vals, lengths=lengths, codes=codes)
+    return HuffmanCode(symbols=vals, lengths=lengths,
+                       codes=canonical_codes(vals, lengths))
 
 
 def huffman_payload_bits(values: np.ndarray, code: HuffmanCode) -> int:
@@ -97,7 +106,11 @@ def huffman_decode(data: bytes, count: int, code: HuffmanCode) -> np.ndarray:
     for i in range(count):
         while True:
             if bitpos == 0:
-                byte = next(it)
+                byte = next(it, None)
+                if byte is None:
+                    raise ValueError(
+                        f"huffman bitstream truncated: decoded {i} of "
+                        f"{count} values")
                 bitpos = 8
             bitpos -= 1
             acc = (acc << 1) | ((byte >> bitpos) & 1)
@@ -108,6 +121,42 @@ def huffman_decode(data: bytes, count: int, code: HuffmanCode) -> np.ndarray:
                 acc, ln = 0, 0
                 break
     return out
+
+
+PAYLOAD_HEADER = "<I"   # u32 nsym | i32 symbols | u8 lengths | bitstream
+
+
+def pack_payload(values: np.ndarray, code: HuffmanCode) -> bytes:
+    """Serialize the two-part code (table in-band) + canonical bitstream.
+    The single source of truth for the ENC_HUFF container wire format."""
+    import struct
+    if code.symbols.size:
+        if (code.symbols.max() > np.iinfo(np.int32).max
+                or code.symbols.min() < np.iinfo(np.int32).min):
+            raise ValueError("huffman symbols exceed the i32 range")
+        if code.lengths.max() > 255:
+            raise ValueError("huffman code depth exceeds u8")
+    return (struct.pack(PAYLOAD_HEADER, code.symbols.size)
+            + code.symbols.astype("<i4").tobytes()
+            + code.lengths.astype("<u1").tobytes()
+            + huffman_encode(values, code))
+
+
+def unpack_payload(payload: bytes, count: int) -> np.ndarray:
+    """Inverse of :func:`pack_payload`: rebuild the canonical code from the
+    in-band table and decode ``count`` values."""
+    import struct
+    (nsym,) = struct.unpack_from(PAYLOAD_HEADER, payload, 0)
+    off = struct.calcsize(PAYLOAD_HEADER)
+    symbols = np.frombuffer(payload, dtype="<i4", count=nsym,
+                            offset=off).astype(np.int64)
+    off += 4 * nsym
+    lengths = np.frombuffer(payload, dtype="<u1", count=nsym,
+                            offset=off).astype(np.int64)
+    off += nsym
+    code = HuffmanCode(symbols=symbols, lengths=lengths,
+                       codes=canonical_codes(symbols, lengths))
+    return huffman_decode(payload[off:], count, code)
 
 
 def scalar_huffman_size_bits(values: np.ndarray,

@@ -29,7 +29,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..optim.adamw import _q8_decode, _q8_encode
+from ..compression.q8 import q8_decode, q8_encode
 
 
 @dataclass(frozen=True)
@@ -49,8 +49,8 @@ def ef_compress_update(grads, ef, cfg: CompressionConfig):
 
     def one(g, e):
         t = g.astype(jnp.float32) + cfg.ef_decay * e
-        codes, scale = _q8_encode(t)
-        deq = _q8_decode(codes, scale)
+        codes, scale = q8_encode(t)
+        deq = q8_decode(codes, scale)
         return deq.astype(g.dtype), t - deq
 
     flat_g, treedef = jax.tree.flatten(grads)
@@ -74,10 +74,10 @@ def cross_pod_psum_compressed(x: jnp.ndarray, mesh,
              in_specs=(in_spec,), out_specs=in_spec)
     def inner(xp):
         # xp: this pod's contribution (leading pod dim of size 1 locally)
-        codes, scale = _q8_encode(xp.astype(jnp.float32))
+        codes, scale = q8_encode(xp.astype(jnp.float32))
         codes_all = jax.lax.all_gather(codes, pod_axis)    # int8 on the wire
         scale_all = jax.lax.all_gather(scale, pod_axis)
-        deq = jax.vmap(_q8_decode)(codes_all, scale_all)
+        deq = jax.vmap(q8_decode)(codes_all, scale_all)
         return jnp.sum(deq, axis=0, keepdims=False)[None] \
             if xp.ndim == codes_all.ndim - 1 else jnp.sum(deq, axis=0)
 

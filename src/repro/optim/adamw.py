@@ -15,12 +15,22 @@ inherit the blocking of the last axis, which is the TP axis blocking).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-MOMENT_BLOCK = 128
+from ..compression.q8 import (Q8_BLOCK as MOMENT_BLOCK, q8_decode,  # noqa: F401
+                              q8_decode_sqrt, q8_encode, q8_encode_sqrt,
+                              q8_scale_shape)
+
+# Back-compat aliases — the 8-bit moment codecs moved to
+# repro.compression.q8 so distributed/serve share them without reaching
+# into optimizer privates.
+_q8_encode = q8_encode
+_q8_decode = q8_decode
+_q8_encode_sqrt = q8_encode_sqrt
+_q8_decode_sqrt = q8_decode_sqrt
+_moment_scale_shape = q8_scale_shape
 
 
 @dataclass(frozen=True)
@@ -32,53 +42,6 @@ class AdamWConfig:
     weight_decay: float = 0.1
     grad_clip: float = 1.0
     quantized_moments: bool = False   # int8 m/v with blockwise scales
-
-
-# -- 8-bit moment codecs ------------------------------------------------------
-
-def _blockable(shape: tuple[int, ...]) -> bool:
-    return len(shape) >= 1 and shape[-1] % MOMENT_BLOCK == 0
-
-
-def _q8_encode(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """x -> (int8 codes, float32 blockwise scales)."""
-    if _blockable(x.shape):
-        b = x.reshape(*x.shape[:-1], x.shape[-1] // MOMENT_BLOCK, MOMENT_BLOCK)
-        scale = jnp.max(jnp.abs(b), axis=-1, keepdims=True) / 127.0
-        scale = jnp.maximum(scale, 1e-12)
-        codes = jnp.clip(jnp.round(b / scale), -127, 127).astype(jnp.int8)
-        return codes.reshape(x.shape), scale.squeeze(-1).astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
-    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return codes, scale.astype(jnp.float32)
-
-
-def _q8_decode(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    if codes.ndim >= 1 and codes.shape[-1] % MOMENT_BLOCK == 0 and \
-            scale.ndim == codes.ndim:
-        b = codes.reshape(*codes.shape[:-1],
-                          codes.shape[-1] // MOMENT_BLOCK, MOMENT_BLOCK)
-        return (b.astype(jnp.float32) * scale[..., None]).reshape(codes.shape)
-    return codes.astype(jnp.float32) * scale
-
-
-def _q8_encode_sqrt(v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Second moment in sqrt-space: v spans many orders of magnitude, so
-    linear absmax codes flush small entries to zero and destabilize
-    1/sqrt(v).  Quantizing sqrt(v) halves the dynamic range in log terms —
-    the same trick 8-bit optimizers use via nonlinear quantization maps."""
-    return _q8_encode(jnp.sqrt(jnp.maximum(v, 0.0)))
-
-
-def _q8_decode_sqrt(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    r = _q8_decode(codes, scale)
-    return jnp.square(r)
-
-
-def _moment_scale_shape(shape: tuple[int, ...]) -> tuple[int, ...]:
-    if _blockable(shape):
-        return (*shape[:-1], shape[-1] // MOMENT_BLOCK)
-    return ()
 
 
 # -- init / update ------------------------------------------------------------

@@ -13,8 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..checkpoint.manager import unflatten_like
-from ..core.codec import decode_state_dict
+from ..compression import decompress
 from ..models.config import ModelConfig
 from ..models.transformer import decode_step, init_params, prefill
 
@@ -35,8 +34,7 @@ class ServeEngine:
     def from_compressed(cls, cfg: ModelConfig, blob: bytes,
                         max_len: int = 512) -> "ServeEngine":
         template = init_params(cfg, jax.random.PRNGKey(0))
-        flat = decode_state_dict(blob)
-        params = unflatten_like(flat, template)
+        params = decompress(blob, like=template)
         return cls(cfg, params, max_len)
 
     # -- generation ------------------------------------------------------------

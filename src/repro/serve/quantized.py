@@ -18,45 +18,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compression.quantizers import quantize_leaf, quantize_tree_q8  # noqa: F401
+# quantize_leaf re-exported: the per-channel int8 quantizer lives in the
+# compression package so the "serve-q8" container codec and this in-memory
+# path share one implementation.
+
 
 def is_q8(leaf) -> bool:
     return isinstance(leaf, dict) and "q8" in leaf and "q8s" in leaf
 
 
-def quantize_leaf(w: jnp.ndarray) -> dict:
-    """Per-output-channel (last dim) symmetric int8 on the DeepCABAC grid.
-
-    Stacked (L, ..., out) tensors keep a per-layer leading dim on the scale
-    so the layer scan can slice codes and scales together."""
-    wf = w.astype(jnp.float32)
-    if w.ndim >= 3:
-        axes = tuple(range(1, w.ndim - 1))
-        scale = jnp.max(jnp.abs(wf), axis=axes, keepdims=True)  # (L,1..,out)
-        q = jnp.clip(jnp.round(wf / jnp.maximum(scale / 127.0, 1e-12)),
-                     -127, 127).astype(jnp.int8)
-        scale_out = jnp.maximum(scale.reshape(w.shape[0], w.shape[-1])
-                                / 127.0, 1e-12)
-        return {"q8": q, "q8s": scale_out.astype(jnp.float32)}
-    scale = jnp.maximum(jnp.max(jnp.abs(wf), axis=tuple(
-        range(w.ndim - 1))), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
-    return {"q8": q, "q8s": scale.astype(jnp.float32)}
-
-
 def quantize_params_for_serving(params):
     """int8-quantize the matmul weights: stacked layer tensors (ndim >= 3 —
     per-layer vectors stack to 2-D and stay full precision, as the paper
-    leaves 1-D tensors unquantized) and the unstacked 2-D embed/head."""
-    def visit(path, leaf):
-        if not hasattr(leaf, "ndim") or \
-                not jnp.issubdtype(leaf.dtype, jnp.floating):
-            return leaf
-        top = str(getattr(path[0], "key", "")) if path else ""
-        stacked = top in ("layers", "dense_layers")
-        if (stacked and leaf.ndim >= 3) or (not stacked and leaf.ndim == 2):
-            return quantize_leaf(leaf)
-        return leaf
-    return jax.tree_util.tree_map_with_path(visit, params)
+    leaves 1-D tensors unquantized) and the unstacked 2-D embed/head.
+
+    This is the in-memory form of ``compression.get("serve-q8")`` — the
+    codec's tree pass with {"q8","q8s"} leaf dicts instead of a container.
+    """
+    return quantize_tree_q8(params)
 
 
 def dequant_leaf(leaf, dtype):

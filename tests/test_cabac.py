@@ -3,8 +3,8 @@ paper binarization examples, chunked-stream identity."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import binarization as B
 from repro.core.cabac import RangeDecoder, RangeEncoder

@@ -1,8 +1,8 @@
 """Container/codec: pytree round-trips, dtype fidelity, size accounting."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.codec import (QuantizedTensor, decode_state_dict,
                               encode_state_dict, resolve_dtype)

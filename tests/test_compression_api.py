@@ -1,0 +1,333 @@
+"""repro.compression Codec API: registry round-trips across codecs and
+dtypes, mixed quantized/raw trees, shared q8 primitives, and a regression
+check that CheckpointManager through the codec stays bit-identical to the
+pre-refactor encode path."""
+
+import jax
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro import compression
+from repro.core.codec import (Q8Tensor, QuantizedTensor,
+                              compressed_size_report, encode_state_dict,
+                              resolve_dtype)
+from repro.core.quant import nearest_level
+
+CODECS = ["ckpt-nearest", "deepcabac-v2", "huffman", "raw", "serve-q8"]
+DTYPES = [np.float32, np.float16, ml_dtypes.bfloat16]
+
+
+def make_tree(dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "layers": {"attn": {
+            "wq": (rng.standard_normal((2, 16, 32)) * 0.1).astype(dtype)}},
+        "embed": (rng.standard_normal((64, 32)) * 0.1).astype(dtype),
+        "norm": np.ones(32, dtype=dtype),
+        "step_count": np.array([3], dtype=np.int32),
+    }
+
+
+def test_registry_names():
+    assert set(CODECS) <= set(compression.available())
+    with pytest.raises(KeyError):
+        compression.get("no-such-codec")
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=str)
+@pytest.mark.parametrize("name", CODECS)
+def test_registry_roundtrip(name, dtype):
+    tree = make_tree(dtype)
+    codec = compression.get(name)
+    art = codec.compress(tree)
+
+    # container decode matches the quantizer's reconstruction bit-exactly
+    flat_dec = compression.decompress(art.blob)
+    recon = art.reconstructed()
+    assert set(flat_dec) == set(recon)
+    for k, v in recon.items():
+        assert flat_dec[k].dtype == np.asarray(v).dtype, k
+        np.testing.assert_array_equal(np.asarray(flat_dec[k]),
+                                      np.asarray(v), err_msg=k)
+
+    # tree restore: structure, dtype and shape of every leaf
+    rec = codec.decompress(art.blob, like=tree)
+    flat_in = compression.flatten_tree(tree)
+    flat_out = compression.flatten_tree(rec)
+    assert set(flat_out) == set(flat_in)
+    for k in flat_in:
+        assert flat_out[k].dtype == flat_in[k].dtype, k
+        assert flat_out[k].shape == flat_in[k].shape, k
+
+    # unquantized leaves pass through bit-exactly in every codec
+    np.testing.assert_array_equal(flat_out["norm"], flat_in["norm"])
+    np.testing.assert_array_equal(flat_out["step_count"],
+                                  flat_in["step_count"])
+
+
+@pytest.mark.parametrize("name", ["ckpt-nearest", "deepcabac-v2", "huffman"])
+def test_quantized_error_bounded(name):
+    tree = make_tree(np.float32)
+    codec = compression.get(name)
+    art = codec.compress(tree)
+    rec = codec.decompress(art.blob, like=tree)
+    w_in = tree["embed"].astype(np.float64)
+    w_out = np.asarray(rec["embed"]).astype(np.float64)
+    step = art.quantized["embed"].step
+    lam = art.hyperparams.get("lam", 0.0)
+    if lam == 0.0:   # nearest-level: half-step error bound
+        assert np.max(np.abs(w_in - w_out)) <= step / 2 * (1 + 1e-3) + 1e-7
+
+
+def test_mixed_quantized_raw_tree():
+    rng = np.random.default_rng(3)
+    tree = {
+        "w": (rng.standard_normal((16, 16)) * 0.1).astype(np.float32),
+        "bias": rng.standard_normal(16).astype(np.float32),      # 1-D: raw
+        "ids": np.arange(64, dtype=np.int64).reshape(8, 8),      # int: raw
+    }
+    art = compression.get("ckpt-nearest").compress(tree)
+    assert isinstance(art.quantized["w"], QuantizedTensor)
+    assert isinstance(art.quantized["bias"], np.ndarray)
+    assert isinstance(art.quantized["ids"], np.ndarray)
+    rec = compression.decompress(art.blob, like=tree)
+    np.testing.assert_array_equal(rec["bias"], tree["bias"])
+    np.testing.assert_array_equal(rec["ids"], tree["ids"])
+
+
+def test_serve_q8_codec_matches_serving_tree_pass():
+    """The serve-q8 container path and the in-memory {"q8","q8s"} tree pass
+    share one quantizer — levels/scales must agree exactly."""
+    from repro.serve.quantized import dequant_leaf, is_q8, \
+        quantize_params_for_serving
+    tree = make_tree(np.float32)
+    qp = quantize_params_for_serving(tree)
+    assert is_q8(qp["layers"]["attn"]["wq"])
+    assert is_q8(qp["embed"])
+    assert not is_q8(qp["norm"])
+
+    art = compression.get("serve-q8").compress(tree)
+    q = compression.decompress(art.blob, dequantize=False)
+    assert isinstance(q["embed"], Q8Tensor)
+    np.testing.assert_array_equal(q["embed"].levels,
+                                  np.asarray(qp["embed"]["q8"]))
+    np.testing.assert_array_equal(q["embed"].scale,
+                                  np.asarray(qp["embed"]["q8s"]))
+    np.testing.assert_array_equal(
+        q["embed"].dequantize(),
+        np.asarray(dequant_leaf(qp["embed"], np.float32)))
+    np.testing.assert_array_equal(
+        q["layers/attn/wq"].levels,
+        np.asarray(qp["layers"]["attn"]["wq"]["q8"]))
+
+
+def test_checkpoint_codec_bit_identical_to_legacy(tmp_path):
+    """CheckpointManager.save through `ckpt-nearest` must produce the same
+    container bytes as the pre-refactor private _encode_params, and restore
+    must round-trip it."""
+    from repro.checkpoint.manager import (CheckpointConfig,
+                                          CheckpointManager, flatten_tree)
+    rng = np.random.default_rng(11)
+    params = {
+        "layers": {"w": (rng.standard_normal((4, 32, 16)) * 0.05
+                         ).astype(np.float32)},
+        "embed": (rng.standard_normal((64, 16)) * 0.05).astype(np.float32),
+        "norm": np.ones(16, np.float32),
+    }
+    state = {"params": params, "step": np.zeros((), np.int32)}
+    delta_rel = 1e-3
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path),
+                                             delta_rel=delta_rel))
+    mgr.save(state, 1)
+
+    # the exact pre-refactor CheckpointManager._encode_params
+    entries = {}
+    for name, w in flatten_tree(params).items():
+        if w.ndim >= 2 and np.issubdtype(w.dtype, np.floating):
+            wf = w.astype(np.float64)
+            step = max(delta_rel * float(wf.std()), 1e-12)
+            levels = nearest_level(wf.ravel(), step).reshape(w.shape)
+            entries[name] = QuantizedTensor(levels, step, str(w.dtype))
+        else:
+            entries[name] = w
+    legacy_blob = encode_state_dict(entries)
+
+    with open(tmp_path / "step_00000001" / "params.dcbc", "rb") as f:
+        assert f.read() == legacy_blob
+
+    restored, meta = mgr.restore(state)
+    assert meta["codec"] == "ckpt-nearest"
+    for a, b in zip(jax.tree.leaves(params),
+                    jax.tree.leaves(restored["params"])):
+        assert np.asarray(a).shape == np.asarray(b).shape
+    np.testing.assert_array_equal(np.asarray(restored["params"]["norm"]),
+                                  params["norm"])
+
+
+def test_checkpoint_bf16_params_quantize_with_bounded_error(tmp_path):
+    """Intentional change vs the pre-refactor path: bf16 params (every
+    real config's param_dtype) now quantize like any other float instead
+    of falling through np.issubdtype's False into raw storage.  Guard the
+    error bound: step/2 + one bf16 ulp of re-rounding."""
+    import ml_dtypes
+    from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+    rng = np.random.default_rng(7)
+    w = (rng.standard_normal((32, 32)) * 0.1).astype(ml_dtypes.bfloat16)
+    state = {"params": {"w": w}, "step": np.zeros((), np.int32)}
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path), delta_rel=1e-3))
+    mgr.save(state, 1)
+    restored, meta = mgr.restore(state)
+    out = np.asarray(restored["params"]["w"])
+    assert out.dtype == np.dtype(ml_dtypes.bfloat16)
+    wf = w.astype(np.float64)
+    step = max(1e-3 * wf.std(), 1e-12)
+    ulp = np.abs(wf) * 2.0 ** -8   # bf16 has 8 significand bits
+    assert np.all(np.abs(wf - out.astype(np.float64)) <= step / 2 + ulp)
+    assert meta["params_compressed_bytes"] < meta["params_raw_bytes"]
+
+
+def test_decompress_like_with_dequantize_false():
+    """like= and dequantize=False compose: quantized leaves land in the
+    tree structure as QuantizedTensor/Q8Tensor objects."""
+    tree = make_tree(np.float32)
+    for name in ["ckpt-nearest", "serve-q8"]:
+        blob = compression.get(name).compress(tree).blob
+        rec = compression.get(name).decompress(blob, like=tree,
+                                               dequantize=False)
+        emb = rec["embed"]
+        assert hasattr(emb, "dequantize") and emb.shape == (64, 32), name
+        np.testing.assert_array_equal(rec["norm"], tree["norm"])
+
+
+def test_checkpoint_accepts_registry_codec_name(tmp_path):
+    from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+    tree = make_tree(np.float32)
+    state = {"params": tree, "step": np.zeros((), np.int32)}
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path), codec="raw"))
+    mgr.save(state, 2)
+    restored, meta = mgr.restore(state)
+    assert meta["codec"] == "raw"
+    for a, b in zip(jax.tree.leaves(tree),
+                    jax.tree.leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_forwards_hyperparams_to_named_codec(tmp_path):
+    """delta_rel reaches any codec that accepts it (not just the default),
+    and meta records the codec's actual hyperparams."""
+    from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path), codec="huffman",
+                                             delta_rel=0.05))
+    assert mgr._codec().quantizer.delta_rel == 0.05
+    tree = make_tree(np.float32)
+    state = {"params": tree, "step": np.zeros((), np.int32)}
+    mgr.save(state, 1)
+    _, meta = mgr.restore(state)
+    assert meta["codec"] == "huffman"
+    assert meta["delta_rel"] == 0.05
+    assert meta["codec_hyperparams"]["delta_rel"] == 0.05
+    # codecs without the knob ignore it instead of crashing or lying
+    mgr2 = CheckpointManager(CheckpointConfig(str(tmp_path) + "2",
+                                              codec="serve-q8",
+                                              delta_rel=0.05))
+    mgr2.save(state, 1)
+    _, meta2 = mgr2.restore(state)
+    assert "delta_rel" not in meta2
+    assert "params_mode" not in meta2   # codec= supersedes the legacy knob
+    # deepcabac-v2 honors delta_rel as a relative RD step (not the
+    # absolute default delta, which would wreck small-std weights)
+    mgr3 = CheckpointManager(CheckpointConfig(str(tmp_path) + "3",
+                                              codec="deepcabac-v2",
+                                              delta_rel=1e-3))
+    codec3 = mgr3._codec()
+    assert codec3.hyperparams["delta_rel"] == 1e-3
+    mgr3.save(state, 1)
+    restored3, meta3 = mgr3.restore(state)
+    assert meta3["delta_rel"] == 1e-3
+    w = np.asarray(tree["embed"], dtype=np.float64)
+    err = np.max(np.abs(w - np.asarray(restored3["params"]["embed"],
+                                       dtype=np.float64)))
+    assert err <= 1e-3 * w.std() * 2  # relative grid, not delta=0.01
+
+
+def test_constant_tensor_quantizes_sanely():
+    """std(w) ~ 0 falls back to max|w| scaling instead of ~1e12 levels —
+    including constant-up-to-noise tensors, not just exact constants."""
+    const = np.full((4, 8), 0.5, np.float32)
+    near = const.copy()
+    near[0, 0] += 1e-6
+    for tree in [{"w": const}, {"w": near}]:
+        for name in ["ckpt-nearest", "huffman"]:
+            art = compression.get(name).compress(tree)
+            assert np.abs(art.quantized["w"].levels).max() <= 2000
+            rec = compression.decompress(art.blob, like=tree)
+            np.testing.assert_allclose(rec["w"], tree["w"], atol=0.5 * 1e-3)
+    zero = {"w": np.zeros((4, 8), np.float32)}
+    art = compression.get("ckpt-nearest").compress(zero)
+    rec = compression.decompress(art.blob, like=zero)
+    np.testing.assert_array_equal(rec["w"], zero["w"])
+
+
+def test_zero_size_tensor_roundtrips_every_codec():
+    tree = {"w": np.zeros((0, 4), np.float32)}
+    for name in CODECS:
+        art = compression.get(name).compress(tree)
+        rec = compression.decompress(art.blob, like=tree)
+        assert rec["w"].shape == (0, 4), name
+        assert rec["w"].dtype == np.float32, name
+
+
+def test_truncated_huffman_payload_raises_named_error():
+    tree = {"w": (np.random.default_rng(9).standard_normal((64, 64)) * 0.1
+                  ).astype(np.float32)}
+    blob = compression.get("huffman", delta_rel=0.1).compress(tree).blob
+    with pytest.raises(ValueError, match="truncated"):
+        compression.decompress(blob[:-20])
+
+
+def test_raw_codec_has_no_coder():
+    codec = compression.get("raw")
+    assert codec.coder is None and codec.quantizer is None
+
+
+def test_q8_primitives_shared():
+    """optim/distributed/serve pull one q8 implementation from
+    compression.q8 (no more private cross-module imports)."""
+    from repro.compression.q8 import q8_decode, q8_encode
+    from repro.optim import adamw
+    assert adamw._q8_encode is q8_encode
+    assert adamw._q8_decode is q8_decode
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((4, 256)).astype(np.float32)
+    codes, scale = q8_encode(x)
+    back = np.asarray(q8_decode(codes, scale))
+    assert np.asarray(codes).dtype == np.int8
+    assert np.max(np.abs(back - x)) <= np.max(np.abs(x)) / 127.0 + 1e-6
+
+
+def test_size_report_respects_dtype():
+    """orig_mb/ratio_pct derive from each entry's dtype, not 4 B/param."""
+    w16 = np.ones((32, 32), np.float16)
+    blob = encode_state_dict({"w": w16})
+    rep = compressed_size_report({"w": w16}, blob)
+    assert rep["orig_mb"] == pytest.approx(32 * 32 * 2 / 2**20)
+    qt = QuantizedTensor(np.zeros((8, 8), np.int64), 0.1, "bfloat16")
+    rep2 = compressed_size_report({"q": qt}, b"\0" * 16)
+    assert rep2["orig_mb"] == pytest.approx(8 * 8 * 2 / 2**20)
+    assert rep2["bits_per_param"] == pytest.approx(8 * 16 / 64)
+    f32 = np.ones((16, 16), np.float32)
+    rep3 = compressed_size_report({"w": f32}, b"\0" * 64)
+    assert rep3["orig_mb"] == pytest.approx(16 * 16 * 4 / 2**20)
+
+
+def test_artifact_blob_is_v1_when_no_new_encodings():
+    """Cabac/raw-only containers keep the version-1 header so pre-existing
+    blobs and readers stay byte-compatible."""
+    tree = make_tree(np.float32)
+    import struct
+    for name, want in [("ckpt-nearest", 1), ("raw", 1),
+                       ("huffman", 2), ("serve-q8", 2)]:
+        blob = compression.get(name).compress(tree).blob
+        (version,) = struct.unpack_from("<H", blob, 4)
+        assert version == want, name
