@@ -1,0 +1,113 @@
+"""Serving-throughput smoke benchmark: tokens/s through ServeSession.
+
+Measures the request-level serving path end to end on the smoke config —
+prefill and decode split out per backend — and writes ``BENCH_serve.json``
+so CI accumulates a perf trajectory.  Numbers are host-CPU smoke-scale
+(regression tracking, not roofline claims; see the dry-run analysis for
+TPU projections).
+
+Run: PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def bench_backend(cfg, weights, backend: str, *, slots: int,
+                  prompt_len: int, steps: int, requests: int) -> dict:
+    import jax
+    from repro.serve.session import ServeConfig, ServeSession
+
+    scfg = ServeConfig(slots=slots, max_len=prompt_len + steps)
+    t0 = time.time()
+    session = ServeSession(cfg, weights, backend=backend, serve_cfg=scfg)
+    t_load = time.time() - t0
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(requests)]
+
+    # warmup: compile the batched prefill/decode/scatter shapes the timed
+    # region will hit (same request count and prompt length)
+    warm = [session.submit(p, max_new_tokens=2) for p in prompts]
+    session.run()
+    assert all(w.done for w in warm)
+    jax.block_until_ready(session.params)
+
+    t0 = time.time()
+    handles = [session.submit(p, max_new_tokens=steps) for p in prompts]
+    # admit everything up front (slots >= requests) so the prefill/decode
+    # split is clean: _admit runs only prefills (+ first-token sampling)
+    session._admit()
+    t_prefill_phase = time.time() - t0
+    assert session.num_queued == 0, "bench requires slots >= requests"
+
+    t1 = time.time()
+    session.run()
+    t_decode_phase = time.time() - t1
+    assert all(h.done for h in handles)
+
+    prompt_tokens = sum(p.size for p in prompts)
+    # one token per request is emitted by prefill; the rest by decode
+    first_tokens = len(handles)
+    gen_tokens = sum(len(h.tokens) for h in handles) - first_tokens
+    total = t_prefill_phase + t_decode_phase
+    return {
+        "backend": backend,
+        "slots": slots,
+        "requests": requests,
+        "prompt_len": prompt_len,
+        "steps": steps,
+        "load_s": round(t_load, 4),
+        "prefill_s": round(t_prefill_phase, 4),
+        "decode_s": round(t_decode_phase, 4),
+        "prefill_tok_s": round((prompt_tokens + first_tokens)
+                               / max(t_prefill_phase, 1e-9), 1),
+        "decode_tok_s": round(gen_tokens / max(t_decode_phase, 1e-9), 1),
+        "total_tok_s": round((prompt_tokens + first_tokens + gen_tokens)
+                             / max(total, 1e-9), 1),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args, _ = ap.parse_known_args()
+
+    import jax
+    from repro import compression
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import init_params
+
+    cfg = get_smoke_config("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    blob = compression.get("serve-q8").compress(params).blob
+
+    steps = 16 if args.fast else 48
+    requests = 6 if args.fast else 12
+    rows = [
+        bench_backend(cfg, params, "bf16", slots=requests, prompt_len=16,
+                      steps=steps, requests=requests),
+        bench_backend(cfg, params, "q8", slots=requests, prompt_len=16,
+                      steps=steps, requests=requests),
+        bench_backend(cfg, blob, "container", slots=requests, prompt_len=16,
+                      steps=steps, requests=requests),
+    ]
+    report = {"bench": "serve_session_smoke", "arch": cfg.name,
+              "fast": bool(args.fast), "rows": rows}
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    for r in rows:
+        print(f"serve/{r['backend']},{r['total_tok_s']},"
+              f"{json.dumps(r, default=float)}", flush=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,12 @@
-"""Serve a model from a DeepCABAC container with batched requests.
+"""Serve a model from a DeepCABAC container with request-level batching.
 
     PYTHONPATH=src python examples/serve_compressed.py
 
 Trains briefly, writes the weights as a DeepCABAC container (the paper's
-deployment artifact), loads a ServeEngine from the container, and runs
-batched greedy generation — verifying the compressed engine emits the same
-tokens as the raw-weight engine.
+deployment artifact), then serves through `ServeSession` with three weight
+backends — `bf16` (raw weights), `container` (stream-decoded blob), and
+`q8` (in-memory int8 fixed-point) — submitting mixed-length requests and
+verifying the container session emits exactly the raw session's tokens.
 """
 
 import numpy as np
@@ -16,7 +17,15 @@ from repro.configs import get_smoke_config
 from repro.data.pipeline import make_batch
 from repro.models.transformer import init_params, train_loss
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
-from repro.serve.engine import ServeEngine
+from repro.serve.session import ServeConfig, ServeSession
+
+
+def run_session(cfg, weights, backend, prompts, steps):
+    session = ServeSession(cfg, weights, backend=backend,
+                           serve_cfg=ServeConfig(slots=4, max_len=96))
+    handles = [session.submit(p, max_new_tokens=steps) for p in prompts]
+    session.run()
+    return [h.result() for h in handles]
 
 
 def main():
@@ -37,16 +46,22 @@ def main():
           f"({res.report['bits_per_param']:.2f} bits/param, "
           f"x{100/res.report['ratio_pct']:.1f} vs fp32)")
 
-    raw = ServeEngine(cfg, params, max_len=96)
-    compressed = ServeEngine.from_compressed(cfg, res.blob, max_len=96)
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, (8, 16)).astype(np.int32)
-    out_raw = raw.generate(prompts, steps=24)
-    out_c = compressed.generate(prompts, steps=24)
-    match = np.mean(out_raw == out_c)
-    print(f"batched generation: {out_c.shape}; "
+    # mixed-length request stream — more requests than KV slots, so the
+    # scheduler exercises admission + eviction
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (16, 9, 24, 12, 16, 7)]
+    out_raw = run_session(cfg, params, "bf16", prompts, steps=24)
+    out_c = run_session(cfg, res.blob, "container", prompts, steps=24)
+    match = np.mean([np.mean(a == b) for a, b in zip(out_raw, out_c)])
+    print(f"{len(prompts)} requests x 24 tokens; "
           f"token agreement raw-vs-compressed = {match:.3f}")
     assert match == 1.0, "near-lossless container must match greedy decode"
+
+    # the int8 fixed-point path trades exactness for bandwidth
+    out_q8 = run_session(cfg, params, "q8", prompts, steps=24)
+    agree = np.mean([np.mean(a == b) for a, b in zip(out_raw, out_q8)])
+    print(f"q8 fixed-point backend token agreement vs bf16 = {agree:.3f}")
     print("OK")
 
 

@@ -27,6 +27,7 @@ from .tree import flatten_tree, unflatten_like  # noqa: F401
 _LAZY = {
     "Codec": "codec",
     "decompress": "codec",
+    "iter_decompress": "codec",
     "EntropyCoder": "coders",
     "CabacCoder": "coders",
     "HuffmanCoder": "coders",

@@ -15,12 +15,22 @@ from typing import Callable
 
 import numpy as np
 
-from ..core.codec import compressed_size_report, decode_state_dict
+from ..core.codec import (compressed_size_report, decode_state_dict,
+                          iter_decode_state_dict)
 from ..core.container import ContainerWriter
 from .artifact import Artifact
 from .coders import EntropyCoder
 from .quantizers import Quantizer
 from .tree import flatten_tree, unflatten_like
+
+
+def iter_decompress(blob: bytes, dequantize: bool = True):
+    """Streaming decode of any codec's container: yields ``(name, tensor)``
+    one record at a time.  A consumer that converts each tensor to its
+    destination representation before advancing keeps peak decoded host
+    memory bounded by the largest tensor (layer-bound, not model-bound) —
+    the contract the ``container`` serving weight backend relies on."""
+    yield from iter_decode_state_dict(blob, dequantize=dequantize)
 
 
 def decompress(blob: bytes, like=None, dequantize: bool = True):

@@ -117,43 +117,54 @@ def encode_state_dict(entries: dict[str, QuantizedTensor | np.ndarray],
     return w.tobytes()
 
 
+def decode_record(hdr, payload: bytes, dequantize: bool = True
+                  ) -> np.ndarray | QuantizedTensor | Q8Tensor:
+    """Decode one container record (header + payload) to its tensor."""
+    if hdr.encoding == ENC_RAW:
+        return np.frombuffer(
+            payload, dtype=resolve_dtype(hdr.dtype)).reshape(
+                hdr.shape).copy()
+    if hdr.encoding == ENC_CABAC:
+        count = int(np.prod(hdr.shape)) if hdr.shape else 1
+        offs, chunks = 0, []
+        for ln in hdr.chunk_lens:
+            chunks.append(payload[offs:offs + ln])
+            offs += ln
+        levels = decode_level_chunks(
+            chunks, count, hdr.num_gr, hdr.chunk_size).reshape(hdr.shape)
+        qt = QuantizedTensor(levels=levels, step=hdr.step, dtype=hdr.dtype)
+        return qt.dequantize() if dequantize else qt
+    if hdr.encoding == ENC_HUFF:
+        from .huffman import unpack_payload
+        count = int(np.prod(hdr.shape)) if hdr.shape else 1
+        levels = unpack_payload(payload, count).reshape(hdr.shape)
+        qt = QuantizedTensor(levels=levels, step=hdr.step, dtype=hdr.dtype)
+        return qt.dequantize() if dequantize else qt
+    if hdr.encoding == ENC_Q8:
+        sc_count = int(np.prod(hdr.scale_shape)) if hdr.scale_shape else 1
+        scale = np.frombuffer(payload, dtype="<f4",
+                              count=sc_count).reshape(
+                                  hdr.scale_shape).copy()
+        levels = np.frombuffer(payload, dtype=np.int8,
+                               offset=4 * sc_count).reshape(
+                                   hdr.shape).copy()
+        q8 = Q8Tensor(levels=levels, scale=scale, dtype=hdr.dtype)
+        return q8.dequantize() if dequantize else q8
+    raise ValueError(f"unknown encoding {hdr.encoding}")
+
+
+def iter_decode_state_dict(data: bytes, dequantize: bool = True):
+    """Per-tensor streaming decode: yields ``(name, tensor)`` record by
+    record, so a consumer that converts/discards each tensor before pulling
+    the next keeps peak decoded host memory bounded by the largest single
+    tensor, not the model (the container backend's load path)."""
+    for hdr, payload in ContainerReader(data):
+        yield hdr.name, decode_record(hdr, payload, dequantize)
+
+
 def decode_state_dict(data: bytes, dequantize: bool = True
                       ) -> dict[str, np.ndarray | QuantizedTensor | Q8Tensor]:
-    out: dict[str, np.ndarray | QuantizedTensor | Q8Tensor] = {}
-    for hdr, payload in ContainerReader(data):
-        if hdr.encoding == ENC_RAW:
-            out[hdr.name] = np.frombuffer(
-                payload, dtype=resolve_dtype(hdr.dtype)).reshape(
-                    hdr.shape).copy()
-        elif hdr.encoding == ENC_CABAC:
-            count = int(np.prod(hdr.shape)) if hdr.shape else 1
-            offs, chunks = 0, []
-            for ln in hdr.chunk_lens:
-                chunks.append(payload[offs:offs + ln])
-                offs += ln
-            levels = decode_level_chunks(
-                chunks, count, hdr.num_gr, hdr.chunk_size).reshape(hdr.shape)
-            qt = QuantizedTensor(levels=levels, step=hdr.step, dtype=hdr.dtype)
-            out[hdr.name] = qt.dequantize() if dequantize else qt
-        elif hdr.encoding == ENC_HUFF:
-            from .huffman import unpack_payload
-            count = int(np.prod(hdr.shape)) if hdr.shape else 1
-            levels = unpack_payload(payload, count).reshape(hdr.shape)
-            qt = QuantizedTensor(levels=levels, step=hdr.step, dtype=hdr.dtype)
-            out[hdr.name] = qt.dequantize() if dequantize else qt
-        elif hdr.encoding == ENC_Q8:
-            sc_count = int(np.prod(hdr.scale_shape)) if hdr.scale_shape else 1
-            scale = np.frombuffer(payload, dtype="<f4",
-                                  count=sc_count).reshape(
-                                      hdr.scale_shape).copy()
-            levels = np.frombuffer(payload, dtype=np.int8,
-                                   offset=4 * sc_count).reshape(
-                                       hdr.shape).copy()
-            q8 = Q8Tensor(levels=levels, scale=scale, dtype=hdr.dtype)
-            out[hdr.name] = q8.dequantize() if dequantize else q8
-        else:
-            raise ValueError(f"unknown encoding {hdr.encoding}")
-    return out
+    return dict(iter_decode_state_dict(data, dequantize))
 
 
 def compressed_size_report(entries: dict, blob: bytes) -> dict[str, float]:

@@ -138,6 +138,10 @@ class ContainerReader:
 
     def __iter__(self):
         data = self._data
+        # payloads are yielded as zero-copy memoryview slices: a streaming
+        # consumer (serve weight backends) then pays one decoded-tensor
+        # copy per record, not an extra per-record payload copy
+        view = memoryview(data)
         off = self._offset
         for _ in range(self.num_records):
             (nlen,) = struct.unpack_from("<H", data, off); off += 2
@@ -164,7 +168,7 @@ class ContainerReader:
                 scale_shape = struct.unpack_from(f"<{sndim}I", data, off)
                 off += 4 * sndim
             (plen,) = struct.unpack_from("<Q", data, off); off += 8
-            payload = data[off:off + plen]; off += plen
+            payload = view[off:off + plen]; off += plen
             yield RecordHeader(name, enc, dtype, tuple(shape), step, num_gr,
                                chunk_size, chunk_lens, tuple(scale_shape)), \
                 payload

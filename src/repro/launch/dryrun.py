@@ -341,6 +341,8 @@ def lower_cell(arch: str, shape_name: str, mesh, cfg_overrides=None,
 def analyze(lowered, compiled, n_chips: int) -> dict:
     from .hlo_analysis import trip_aware_cost
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax returned [dict]
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     hlo_text = compiled.as_text()
     coll = collective_bytes(hlo_text, n_chips)

@@ -1,8 +1,15 @@
-"""Serving entry point: batched generation, optionally from a DeepCABAC
-container.
+"""Serving entry point: request-level continuous batching over a
+pluggable weight backend, optionally from a DeepCABAC container.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
-        --ckpt /tmp/model.dcbc --batch 4 --prompt-len 16 --steps 32
+        --ckpt /tmp/model.dcbc --backend container --batch 4 \
+        --prompt-len 16 --steps 32
+
+``--backend``: ``bf16`` (full-precision weights), ``q8`` (in-memory int8
+fixed-point matmul weights), ``container`` (stream-decode the DCBC blob;
+serve-q8 records stay int8).  Without ``--ckpt`` the bf16/q8 backends use
+random init; the container backend packs a serve-q8 container in-process
+first so the streaming load path is still exercised.
 """
 
 from __future__ import annotations
@@ -14,7 +21,8 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..models.transformer import init_params
-from ..serve.engine import ServeEngine
+from ..serve.backends import available_backends
+from ..serve.session import ServeConfig, ServeSession
 
 
 def main():
@@ -23,7 +31,11 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--ckpt", default=None,
                     help="DeepCABAC container (.dcbc); random init if unset")
+    ap.add_argument("--backend", choices=available_backends(),
+                    default="bf16", help="weight backend (see serve/backends)")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="KV slots (0 = one per request)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -33,17 +45,29 @@ def main():
     max_len = args.prompt_len + args.steps
     if args.ckpt:
         with open(args.ckpt, "rb") as f:
-            engine = ServeEngine.from_compressed(cfg, f.read(),
-                                                 max_len=max_len)
+            weights = f.read()
+    elif args.backend == "container":
+        from .. import compression
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        weights = compression.get("serve-q8").compress(params).blob
+        print(f"packed serve-q8 container in-process: "
+              f"{len(weights) / 2**20:.1f} MiB")
     else:
-        engine = ServeEngine(cfg, init_params(cfg, jax.random.PRNGKey(0)),
-                             max_len=max_len)
+        weights = init_params(cfg, jax.random.PRNGKey(0))
+
+    scfg = ServeConfig(slots=args.slots or args.batch, max_len=max_len)
+    session = ServeSession(cfg, weights, backend=args.backend,
+                           serve_cfg=scfg)
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)
-    out = engine.generate(prompts, steps=args.steps,
-                          temperature=args.temperature)
-    print(f"generated {out.shape} tokens; first row tail: "
+    handles = [session.submit(p, max_new_tokens=args.steps,
+                              temperature=args.temperature)
+               for p in prompts]
+    session.run()
+    out = np.stack([h.result() for h in handles])
+    print(f"backend={args.backend} slots={scfg.slots}: generated "
+          f"{out.shape} tokens; first row tail: "
           f"{out[0, -min(16, out.shape[1]):].tolist()}")
 
 

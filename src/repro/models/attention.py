@@ -18,17 +18,34 @@ from ..serve.quantized import dequant_cache_value, quantize_cache_value
 from .layers import apply_m_rope, apply_rope, rms_norm
 
 
-def _cache_store(x, cache_arr):
+def _cache_store(x, cache_arr, delta):
     """Quantize to the cache's storage dtype (int8 fixed-point serving)."""
     if cache_arr.dtype == jnp.int8:
-        return quantize_cache_value(x)
+        return quantize_cache_value(x, delta)
     return x.astype(cache_arr.dtype)
 
 
-def _cache_load(arr, dtype):
+def _cache_load(arr, dtype, delta):
     if arr.dtype == jnp.int8:
-        return dequant_cache_value(arr, dtype)
+        return dequant_cache_value(arr, dtype, delta)
     return arr
+
+
+def _cache_update(cache_arr, new_vals, cache_pos, delta):
+    """Write this step's K/V into the preallocated cache.
+
+    cache_pos scalar: all rows write at the same offset (one-shot batch).
+    cache_pos (B,) int32: per-slot ragged positions (continuous batching) —
+    each row scatters its single new entry at its own offset.
+    """
+    vals = _cache_store(new_vals, cache_arr, delta)
+    cp = jnp.asarray(cache_pos)
+    if cp.ndim == 0:
+        return lax.dynamic_update_slice_in_dim(cache_arr, vals, cache_pos,
+                                               axis=1)
+    assert new_vals.shape[1] == 1, "ragged cache update is decode-only (S=1)"
+    b = cache_arr.shape[0]
+    return cache_arr.at[jnp.arange(b), cp].set(vals[:, 0])
 
 NEG_INF = -1e30
 
@@ -133,7 +150,9 @@ def gqa_attention(x, p, cfg, positions, *, cache=None, cache_pos=None,
     """x (B,S,d).  Returns (out (B,S,d), new_cache | None).
 
     Prefill/train: cache None (train) or dict to fill (prefill).
-    Decode: S == 1, cache holds (B, Smax, G, D), cache_pos scalar.
+    Decode: S == 1, cache holds (B, Smax, G, D); cache_pos is a scalar
+    (whole batch at one offset) or a (B,) int32 vector of per-row offsets
+    (ragged continuous batching — see _cache_update).
     """
     b, s, _ = x.shape
     h, g, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -157,19 +176,20 @@ def gqa_attention(x, p, cfg, positions, *, cache=None, cache_pos=None,
 
     new_cache = None
     kv_len = None
+    delta = cfg.kv_cache_delta
     if cache is not None and cache_pos is not None:        # decode step
-        ck = lax.dynamic_update_slice_in_dim(
-            cache["k"], _cache_store(k, cache["k"]), cache_pos, axis=1)
-        cv = lax.dynamic_update_slice_in_dim(
-            cache["v"], _cache_store(v, cache["v"]), cache_pos, axis=1)
+        ck = _cache_update(cache["k"], k, cache_pos, delta)
+        cv = _cache_update(cache["v"], v, cache_pos, delta)
         new_cache = {"k": ck, "v": cv}
-        k, v = _cache_load(ck, q.dtype), _cache_load(cv, q.dtype)
-        kv_len = jnp.full((b,), cache_pos + s, dtype=jnp.int32)
+        k = _cache_load(ck, q.dtype, delta)
+        v = _cache_load(cv, q.dtype, delta)
+        kv_len = jnp.broadcast_to(
+            jnp.asarray(cache_pos, jnp.int32) + s, (b,))
     elif cache is not None:                                 # prefill: fill
         ck = lax.dynamic_update_slice_in_dim(
-            cache["k"], _cache_store(k, cache["k"]), 0, axis=1)
+            cache["k"], _cache_store(k, cache["k"], delta), 0, axis=1)
         cv = lax.dynamic_update_slice_in_dim(
-            cache["v"], _cache_store(v, cache["v"]), 0, axis=1)
+            cache["v"], _cache_store(v, cache["v"], delta), 0, axis=1)
         new_cache = {"k": ck, "v": cv}
 
     out = attend(q, k, v, positions, impl=cfg.attn_impl,
@@ -205,20 +225,20 @@ def mla_attention(x, p, cfg, positions, *, cache=None, cache_pos=None):
 
     new_cache = None
     kv_len = None
+    delta = cfg.kv_cache_delta
     if cache is not None and cache_pos is not None:        # decode
-        ckv_all = lax.dynamic_update_slice_in_dim(
-            cache["ckv"], _cache_store(ckv, cache["ckv"]), cache_pos, axis=1)
-        kr_all = lax.dynamic_update_slice_in_dim(
-            cache["kr"], _cache_store(kr, cache["kr"]), cache_pos, axis=1)
+        ckv_all = _cache_update(cache["ckv"], ckv, cache_pos, delta)
+        kr_all = _cache_update(cache["kr"], kr, cache_pos, delta)
         new_cache = {"ckv": ckv_all, "kr": kr_all}
-        ckv = _cache_load(ckv_all, x.dtype)
-        kr = _cache_load(kr_all, x.dtype)
-        kv_len = jnp.full((b,), cache_pos + s, dtype=jnp.int32)
+        ckv = _cache_load(ckv_all, x.dtype, delta)
+        kr = _cache_load(kr_all, x.dtype, delta)
+        kv_len = jnp.broadcast_to(
+            jnp.asarray(cache_pos, jnp.int32) + s, (b,))
     elif cache is not None:                                 # prefill
         ckv_all = lax.dynamic_update_slice_in_dim(
-            cache["ckv"], _cache_store(ckv, cache["ckv"]), 0, axis=1)
+            cache["ckv"], _cache_store(ckv, cache["ckv"], delta), 0, axis=1)
         kr_all = lax.dynamic_update_slice_in_dim(
-            cache["kr"], _cache_store(kr, cache["kr"]), 0, axis=1)
+            cache["kr"], _cache_store(kr, cache["kr"], delta), 0, axis=1)
         new_cache = {"ckv": ckv_all, "kr": kr_all}
 
     # up-project latents (recompute path; absorbed path is a perf option)

@@ -64,6 +64,9 @@ class ModelConfig:
     param_dtype: str = "float32"
     compute_dtype: str = "float32"
     q8_cache: bool = False         # int8 KV cache (fixed-point serving)
+    kv_cache_delta: float = 1.0 / 16.0   # int8 KV grid step; calibrate via
+    # serve.quantized.calibrate_kv_cache_delta (or ServeConfig.kv_cache_delta)
+    q8_matmul_impl: str = "ref"    # q8 head matmul: ref | pallas | interpret
 
     # distribution / performance knobs (see distributed/sharding.py)
     remat: str = "block"           # none | block | dots

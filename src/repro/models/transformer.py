@@ -347,8 +347,12 @@ def _hybrid_scan(x, params, cfg, positions, pos3d, caches, cache_pos):
 
 def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
             positions=None, pos3d=None, caches=None, cache_pos=None,
-            last_only: bool = False):
-    """Returns (logits, new_caches, aux)."""
+            last_only: bool = False, last_index=None):
+    """Returns (logits, new_caches, aux).
+
+    last_only takes position -1; last_index (B,) int32 gathers one
+    per-row position instead (padded-bucket prefill) — both project the
+    head on a single position, never the full sequence."""
     if cfg.embed_input:
         x = embed_lookup_q8(params["embed"], tokens,
                             jnp.dtype(cfg.compute_dtype))
@@ -357,7 +361,13 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
     x = constrain(x, "batch", "seq", None)
     b, s = x.shape[0], x.shape[1]
     if positions is None:
-        base = 0 if cache_pos is None else cache_pos
+        if cache_pos is None:
+            base = 0
+        else:
+            cp = jnp.asarray(cache_pos)
+            # (B,) per-slot offsets (ragged continuous batching) broadcast
+            # down the sequence axis; scalars broadcast as before
+            base = cp[:, None] if cp.ndim == 1 else cp
         positions = base + jnp.broadcast_to(jnp.arange(s), (b, s))
     if cfg.m_rope and pos3d is None:
         pos3d = jnp.broadcast_to(positions[None], (3, b, s))
@@ -390,15 +400,36 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
             new_caches = None
 
     x = _norm(x, params["final_norm"], cfg)
-    if last_only:
+    if last_index is not None:
+        x = x[jnp.arange(b), last_index][:, None, :]
+    elif last_only:
         x = x[:, -1:, :]
-    head = (dequant_leaf(params["embed"], jnp.float32).T
-            if cfg.tie_embeddings
-            else dequant_leaf(params["head"], jnp.float32))
-    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
-                        head.astype(jnp.float32))
+    logits = _head_logits(x, params, cfg)
     logits = constrain(logits, "batch", "seq", "vocab")
     return logits, new_caches, aux
+
+
+def _head_logits(x, params, cfg: ModelConfig):
+    """Final projection.  An untied q8 head (d, V) with per-vocab-channel
+    scales matches the fused dequant-matmul kernel contract exactly, so the
+    fixed-point serving path reads int8 weights from HBM and dequantizes
+    in-core (kernels/dequant_matmul; impl chosen by cfg.q8_matmul_impl)."""
+    from ..kernels.dequant_matmul import dequant_matmul
+    from ..serve.quantized import is_q8
+
+    head_leaf = params["embed"] if cfg.tie_embeddings else params["head"]
+    bsz, s, d = x.shape
+    if not cfg.tie_embeddings and is_q8(head_leaf):
+        out = dequant_matmul(
+            x.reshape(bsz * s, d).astype(jnp.float32),
+            head_leaf["q8"], head_leaf["q8s"],
+            interpret=cfg.q8_matmul_impl == "interpret",
+            use_ref=cfg.q8_matmul_impl == "ref")
+        return out.reshape(bsz, s, -1)
+    head = (dequant_leaf(head_leaf, jnp.float32).T if cfg.tie_embeddings
+            else dequant_leaf(head_leaf, jnp.float32))
+    return jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                      head.astype(jnp.float32))
 
 
 def train_loss(params, batch: dict, cfg: ModelConfig):
@@ -474,7 +505,11 @@ def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None,
 
 def decode_step(params, cfg: ModelConfig, caches, pos, *, tokens=None,
                 embeds=None, pos3d=None):
-    """One token step.  tokens (B,) or embeds (B,1,d); pos: scalar int32.
+    """One token step.  tokens (B,) or embeds (B,1,d).
+
+    pos: scalar int32 (all rows at one offset) or (B,) int32 per-row
+    offsets — the ragged continuous-batching path, where each KV-cache
+    row is scattered at its own position and masked to its own length.
     Returns (logits (B,V), new_caches)."""
     if tokens is not None:
         tokens = tokens[:, None]

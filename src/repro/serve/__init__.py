@@ -1,10 +1,28 @@
-# NOTE: ServeEngine is imported lazily (repro.serve.engine) to avoid a
+# NOTE: the serving classes are imported lazily (PEP 562) to avoid a
 # circular import: models.transformer uses serve.quantized for the
-# fixed-point serving path.
+# fixed-point serving path, and session/backends import models back.
+
+_LAZY = {
+    "ServeEngine": "engine",
+    "ServeSession": "session",
+    "ServeConfig": "session",
+    "RequestHandle": "session",
+    "WeightBackend": "backends",
+    "get_backend": "backends",
+    "register_backend": "backends",
+    "available_backends": "backends",
+}
+
+__all__ = sorted(_LAZY)
 
 
 def __getattr__(name):
-    if name == "ServeEngine":
-        from .engine import ServeEngine
-        return ServeEngine
-    raise AttributeError(name)
+    submodule = _LAZY.get(name)
+    if submodule is None:
+        raise AttributeError(name)
+    import importlib
+    return getattr(importlib.import_module(f".{submodule}", __name__), name)
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,219 @@
+"""Pluggable serving weight backends: how a ServeSession gets its params.
+
+A ``WeightBackend`` turns a weight *source* (an in-memory pytree or a DCBC
+container blob) into the parameter tree the model consumes.  The string
+registry mirrors ``repro.compression``'s codec registry — new backends
+plug in via :func:`register_backend` without touching any call site:
+
+    ``bf16``       dequantize-on-load: full-precision leaves in memory
+                   (blobs are decoded record-by-record, then dropped).
+    ``q8``         fixed-point serving: eligible matmul weights become
+                   in-memory ``{"q8","q8s"}`` leaves that drive
+                   ``kernels/dequant_matmul`` and ``embed_lookup_q8``
+                   through the model (int8 HBM reads, in-core dequant).
+    ``container``  the paper's deployment artifact: stream-decode a DCBC
+                   blob via the per-tensor iterator
+                   (``compression.iter_decompress``), so peak decoded host
+                   memory is bounded by the largest tensor — layer-bound,
+                   not model-bound.  ``serve-q8`` records stay int8.
+
+Blob loads never materialize the full fp32 tree: the template comes from
+``jax.eval_shape`` (shapes/dtypes only) and each decoded tensor is
+converted to its destination representation before the next record is
+pulled.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..compression.codec import iter_decompress
+from ..compression.quantizers import serve_q8_policy
+from ..compression.tree import _path_key
+from ..core.codec import Q8Tensor
+from .quantized import quantize_leaf, quantize_tree_q8
+
+
+class WeightBackend:
+    """Strategy interface: one weight source -> serving parameter tree."""
+
+    name = "?"
+
+    def load(self, cfg, source):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Registry (mirrors compression.registry)
+# ---------------------------------------------------------------------------
+
+_BACKENDS: dict = {}
+
+
+def register_backend(name: str, factory) -> None:
+    _BACKENDS[name] = factory
+
+
+def available_backends() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+def get_backend(name: str, **overrides) -> WeightBackend:
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown weight backend {name!r}; "
+                       f"available: {available_backends()}")
+    return _BACKENDS[name](**overrides)
+
+
+def resolve_backend(backend) -> WeightBackend:
+    """Accept a registry name or an already-built backend instance."""
+    if isinstance(backend, WeightBackend):
+        return backend
+    return get_backend(backend)
+
+
+# ---------------------------------------------------------------------------
+# Streaming container fold
+# ---------------------------------------------------------------------------
+
+def _template_specs(cfg) -> dict:
+    """Flat name -> ShapeDtypeStruct map from the abstract init (shapes
+    and dtypes only — no weight memory is materialized)."""
+    from ..models.transformer import init_params
+    shapes = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        # _path_key is the same join container record names were written
+        # with (compression.tree.flatten_tree), so lookups can't drift
+        out[_path_key(path)] = leaf
+    return out
+
+
+def _insert(tree: dict, name: str, leaf) -> None:
+    parts = name.split("/")
+    node = tree
+    for p in parts[:-1]:
+        node = node.setdefault(p, {})
+    node[parts[-1]] = leaf
+
+
+def _stream_tree(cfg, blob: bytes, convert) -> dict:
+    """Fold the per-tensor decode iterator into a nested params dict.
+
+    ``convert(name, record, dtype)`` maps one decoded record to its final
+    (device) leaf; the host-side decoded array is dropped before the next
+    record is decoded, so decoded-host peak stays one-tensor-bounded.
+
+    Validated against the model template (same contract the old
+    ``decompress(blob, like=template)`` path enforced): records the model
+    doesn't expect are skipped, shape mismatches raise at load time, and
+    a container missing template tensors raises instead of failing deep
+    inside ``forward``.
+    """
+    specs = _template_specs(cfg)
+    tree: dict = {}
+    seen: set = set()
+    for name, record in iter_decompress(blob, dequantize=False):
+        spec = specs.get(name)
+        if spec is None:
+            continue                       # not part of this model
+        shape = tuple(record.shape)
+        if shape != tuple(spec.shape):
+            raise ValueError(
+                f"{name}: container shape {shape} != model "
+                f"{tuple(spec.shape)}")
+        seen.add(name)
+        _insert(tree, name, convert(name, record, spec.dtype))
+    missing = sorted(set(specs) - seen)
+    if missing:
+        raise KeyError(
+            f"container missing {len(missing)} model tensor(s), e.g. "
+            f"{missing[:3]}")
+    return tree
+
+
+def _to_array(record, dtype):
+    """Decoded record -> device array in the template dtype.
+
+    ``copy=True`` forces a real device buffer (host->HBM on accelerators;
+    on the CPU backend jax would otherwise alias the decoded numpy buffer,
+    silently pinning every decoded tensor on the host heap and defeating
+    the layer-bound streaming contract)."""
+    arr = np.asarray(record.dequantize()
+                     if hasattr(record, "dequantize") else record)
+    return jnp.array(arr, dtype=dtype or arr.dtype, copy=True)
+
+
+def _q8_leaf(record: Q8Tensor) -> dict:
+    return {"q8": jnp.array(record.levels, copy=True),
+            "q8s": jnp.array(record.scale, dtype=jnp.float32, copy=True)}
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+class Bf16Backend(WeightBackend):
+    """Dequantize-on-load (the classic ServeEngine path): pytrees pass
+    through untouched; blobs decode to full-precision leaves in the
+    model's param dtype."""
+
+    name = "bf16"
+
+    def load(self, cfg, source):
+        if isinstance(source, (bytes, bytearray, memoryview)):
+            return _stream_tree(cfg, bytes(source),
+                                lambda name, rec, dt: _to_array(rec, dt))
+        return source
+
+
+class Q8Backend(WeightBackend):
+    """In-memory fixed-point serving: matmul weights become
+    ``{"q8","q8s"}`` leaves (per-out-channel int8 + Delta), which the
+    model dequantizes in-core after int8 HBM reads
+    (``dequant_matmul`` head, ``embed_lookup_q8`` gather, in-scan
+    ``dequant_tree``)."""
+
+    name = "q8"
+
+    def load(self, cfg, source):
+        if isinstance(source, (bytes, bytearray, memoryview)):
+            def convert(name, rec, dt):
+                if isinstance(rec, Q8Tensor):
+                    return _q8_leaf(rec)
+                arr = _to_array(rec, dt)
+                if serve_q8_policy(name, arr):
+                    return quantize_leaf(arr)
+                return arr
+            return _stream_tree(cfg, bytes(source), convert)
+        return quantize_tree_q8(source)
+
+
+class ContainerBackend(WeightBackend):
+    """Serve straight from the DeepCABAC deployment artifact: stream the
+    container record-by-record; ``serve-q8`` records stay int8 (decode-free
+    fixed-point path), entropy-coded records dequantize to the param
+    dtype.  Peak decoded host memory is layer-bound by construction."""
+
+    name = "container"
+
+    def load(self, cfg, source):
+        if not isinstance(source, (bytes, bytearray, memoryview)):
+            raise TypeError(
+                "container backend loads DCBC blobs (bytes); got "
+                f"{type(source).__name__} — use the 'bf16' or 'q8' backend "
+                "for in-memory pytrees")
+
+        def convert(name, rec, dt):
+            if isinstance(rec, Q8Tensor):
+                return _q8_leaf(rec)
+            return _to_array(rec, dt)
+        return _stream_tree(cfg, bytes(source), convert)
+
+
+register_backend("bf16", Bf16Backend)
+register_backend("q8", Q8Backend)
+register_backend("container", ContainerBackend)

@@ -1,65 +1,63 @@
-"""Batched serving engine: prefill + greedy/temperature decode over a
-preallocated KV/state cache, loading weights from DeepCABAC containers.
+"""Batch-call compatibility wrapper over the request-level ServeSession.
 
-The from-compressed path is the paper's deployment story: an 8.7 MB
-container instead of a 553 MB fp32 blob, decoded chunk-parallel at load
-time.  The fixed-point serving path (dequant_matmul kernel) consumes the
-quantized levels directly — see kernels/dequant_matmul.
+``ServeEngine`` keeps the original one-shot API — ``generate(prompts,
+steps)`` over same-length prompts — but delegates scheduling, KV slot
+management and sampling to :class:`~repro.serve.session.ServeSession`.
+New code should use ``ServeSession`` directly (per-request lengths,
+streaming, admission/eviction); see docs/serving_api.md.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..compression import decompress
 from ..models.config import ModelConfig
-from ..models.transformer import decode_step, init_params, prefill
+from .backends import get_backend
+from .session import ServeConfig, ServeSession
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, max_len: int = 512):
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
+                 backend: str = "bf16"):
         self.cfg = cfg
-        self.params = params
+        self.params = get_backend(backend).load(cfg, params)
         self.max_len = max_len
-        self._prefill = jax.jit(
-            lambda p, toks: prefill(p, cfg, tokens=toks, max_len=max_len))
-        self._decode = jax.jit(
-            lambda p, caches, tok, pos: decode_step(p, cfg, caches, pos,
-                                                    tokens=tok))
+        self._sessions: dict[int, ServeSession] = {}
 
     # -- loading -------------------------------------------------------------
     @classmethod
     def from_compressed(cls, cfg: ModelConfig, blob: bytes,
-                        max_len: int = 512) -> "ServeEngine":
-        template = init_params(cfg, jax.random.PRNGKey(0))
-        params = decompress(blob, like=template)
-        return cls(cfg, params, max_len)
+                        max_len: int = 512,
+                        backend: str = "container") -> "ServeEngine":
+        """Load from a DCBC container via the streaming container backend
+        (per-tensor decode; serve-q8 records stay int8 in memory).
+        ``__init__`` accepts blobs directly; this name is kept for the
+        original API."""
+        return cls(cfg, blob, max_len=max_len, backend=backend)
+
+    def _session(self, slots: int) -> ServeSession:
+        # one session per batch size, kept for the engine's lifetime so
+        # jit caches persist across generate calls (matching the old
+        # engine's per-shape jit cache).  Sampling streams are seeded per
+        # request in generate(), so reuse stays reproducible.
+        if slots not in self._sessions:
+            # params are already loaded — "bf16" passes pytrees through
+            self._sessions[slots] = ServeSession(
+                self.cfg, self.params, backend="bf16",
+                serve_cfg=ServeConfig(slots=slots, max_len=self.max_len))
+        return self._sessions[slots]
 
     # -- generation ------------------------------------------------------------
     def generate(self, prompts: np.ndarray, steps: int,
                  temperature: float = 0.0, seed: int = 0) -> np.ndarray:
         """prompts (B, S) int32 -> (B, S + steps) including generated ids."""
-        toks = jnp.asarray(prompts, jnp.int32)
-        b, s = toks.shape
+        prompts = np.asarray(prompts, np.int32)
+        b, s = prompts.shape
         assert s + steps <= self.max_len, "exceeds cache length"
-        logits, caches = self._prefill(self.params, toks)
-        out = [np.asarray(toks)]
-        key = jax.random.PRNGKey(seed)
-        cur = self._sample(logits, temperature, key)
-        for i in range(steps):
-            out.append(np.asarray(cur)[:, None])
-            if i == steps - 1:
-                break
-            key, sub = jax.random.split(key)
-            logits, caches = self._decode(self.params, caches, cur, s + i)
-            cur = self._sample(logits, temperature, sub)
-        return np.concatenate(out, axis=1)
-
-    @staticmethod
-    def _sample(logits, temperature, key):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / temperature, axis=-1).astype(jnp.int32)
+        session = self._session(b)
+        handles = [session.submit(prompts[i], max_new_tokens=steps,
+                                  temperature=temperature, seed=(seed, i))
+                   for i in range(b)]
+        session.run()
+        gen = np.stack([h.result() for h in handles])
+        return np.concatenate([prompts, gen], axis=1)

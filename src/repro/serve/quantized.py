@@ -64,13 +64,40 @@ def embed_lookup_q8(embed_leaf, tokens, dtype):
 
 # -- int8 KV cache -------------------------------------------------------------
 
-CACHE_SCALE = 1.0 / 16.0   # fixed per-install Delta; |k|,|v| <~ 8 post-norm
+# Default per-model Delta (covers |k|,|v| < ~8, the typical post-norm range).
+# The served Delta is carried on ModelConfig.kv_cache_delta / ServeConfig —
+# the old fixed module constant silently clipped activations outside |x| < 8.
+DEFAULT_KV_CACHE_DELTA = 1.0 / 16.0
 
 
-def quantize_cache_value(x: jnp.ndarray) -> jnp.ndarray:
-    return jnp.clip(jnp.round(x.astype(jnp.float32) / CACHE_SCALE),
+def quantize_cache_value(x: jnp.ndarray,
+                         delta: float = DEFAULT_KV_CACHE_DELTA) -> jnp.ndarray:
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / delta),
                     -127, 127).astype(jnp.int8)
 
 
-def dequant_cache_value(q: jnp.ndarray, dtype) -> jnp.ndarray:
-    return (q.astype(jnp.float32) * CACHE_SCALE).astype(dtype)
+def dequant_cache_value(q: jnp.ndarray, dtype,
+                        delta: float = DEFAULT_KV_CACHE_DELTA) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * delta).astype(dtype)
+
+
+def calibrate_kv_cache_delta(cfg, params, tokens, margin: float = 1.05
+                             ) -> float:
+    """Calibrated per-model KV-cache Delta: run a full-precision prefill on
+    ``tokens`` (B, S) and map the observed attention-cache absmax to level
+    127 (times ``margin`` headroom).  Use the result as
+    ``ServeConfig.kv_cache_delta`` / ``ModelConfig.kv_cache_delta`` to avoid
+    the silent clipping a fixed grid causes on out-of-range activations."""
+    # local imports: models.transformer imports this module at module scope
+    from ..models.transformer import init_cache, prefill
+
+    fp_cfg = cfg.replace(q8_cache=False)
+    _, caches = prefill(params, fp_cfg, tokens=jnp.asarray(tokens, jnp.int32),
+                        max_len=tokens.shape[1])
+    template = init_cache(cfg.replace(q8_cache=True), tokens.shape[0],
+                          tokens.shape[1])
+    amax = 0.0
+    for got, want in zip(jax.tree.leaves(caches), jax.tree.leaves(template)):
+        if want.dtype == jnp.int8:   # the leaves q8_cache would quantize
+            amax = max(amax, float(jnp.max(jnp.abs(got))))
+    return max(margin * amax / 127.0, 1e-8)

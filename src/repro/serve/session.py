@@ -1,0 +1,318 @@
+"""Request-level serving: ``ServeSession`` with continuous batching.
+
+Clients ``submit(prompt, max_new_tokens, temperature)`` and receive
+:class:`RequestHandle`\\ s; the scheduler packs active requests into a
+slot-based KV cache (admission on free slot, eviction on EOS/length) and
+runs one batched decode step per :meth:`ServeSession.step`, surfacing
+per-request token streams via ``handle.new_tokens()``.
+
+Slot model: the session preallocates ``init_cache(cfg, slots, max_len)``
+once.  A request is admitted by prefilling its prompt at batch=1 and
+scattering the resulting caches into its slot (axis 1 is the slot axis on
+every cache leaf).  Decode then advances *all* slots with per-slot ragged
+positions (``cache_pos`` as an (S,) int32 vector — see
+``models.transformer``); evicted/free slots keep computing at position 0,
+which is harmless: their writes are either overwritten by the next
+admission's prefill or masked by the per-slot ``kv_len`` until the new
+request's own decode rewrites them.
+
+Weights come from a pluggable :mod:`backend <.backends>` (``bf16`` /
+``q8`` / ``container``).  ``ServeEngine`` is a thin compatibility wrapper
+over this class.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.transformer import decode_step, forward, init_cache, prefill
+from .backends import resolve_backend
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Session knobs (model shape/quantization stays on ModelConfig)."""
+
+    slots: int = 4                 # concurrent requests in the KV cache
+    max_len: int = 512             # per-slot KV capacity (prompt + new)
+    eos_token: int | None = None   # evict a request when it emits this id
+    kv_cache_delta: float | None = None   # override the int8 KV grid step
+    # (see serve.quantized.calibrate_kv_cache_delta); None keeps the
+    # model config's value
+    seed: int = 0                  # base seed for temperature sampling
+    prefill_buckets: tuple = ()    # sorted prompt-length buckets: pad each
+    # admission prefill up to the next bucket so XLA compiles once per
+    # bucket instead of once per distinct prompt length.  Dense-family
+    # only: padded tail tokens are causally invisible to the prompt and
+    # their stale KV is masked/overwritten, but an SSM state or MoE
+    # capacity routing would see them.
+
+
+@dataclass
+class RequestHandle:
+    """Client-side view of one submitted request."""
+
+    id: int
+    prompt: np.ndarray             # (S,) int32
+    max_new_tokens: int
+    temperature: float = 0.0
+    seed: object = None            # per-request sampling seed (int/tuple);
+    # None derives from the session seed + request id
+    tokens: list = field(default_factory=list)   # generated ids (incl. EOS)
+    done: bool = False
+    finish_reason: str | None = None     # "eos" | "length"
+    _stream_cursor: int = 0
+
+    def new_tokens(self) -> list:
+        """Drain this request's token stream (ids since the last call)."""
+        out = self.tokens[self._stream_cursor:]
+        self._stream_cursor = len(self.tokens)
+        return out
+
+    def result(self) -> np.ndarray:
+        assert self.done, "request still in flight; run session.step()"
+        return np.asarray(self.tokens, dtype=np.int32)
+
+
+class _Slot:
+    __slots__ = ("req", "pos", "next_token")
+
+    def __init__(self):
+        self.req: RequestHandle | None = None
+        self.pos = 0               # where next_token's KV will be written
+        self.next_token = 0        # token to feed on the next decode step
+
+
+class ServeSession:
+    """Continuous-batching serving session over a slot-based KV cache."""
+
+    def __init__(self, cfg: ModelConfig, weights, *, backend="bf16",
+                 serve_cfg: ServeConfig | None = None):
+        serve_cfg = serve_cfg or ServeConfig()
+        if serve_cfg.slots < 1 or serve_cfg.max_len < 1:
+            raise ValueError(
+                f"ServeConfig needs slots >= 1 and max_len >= 1; got "
+                f"slots={serve_cfg.slots}, max_len={serve_cfg.max_len}")
+        if serve_cfg.kv_cache_delta is not None:
+            cfg = cfg.replace(kv_cache_delta=serve_cfg.kv_cache_delta)
+        if serve_cfg.prefill_buckets and cfg.family != "dense":
+            raise ValueError(
+                "prefill_buckets pads prompts, which only dense-family "
+                "models ignore (SSM state / MoE routing see pad tokens); "
+                f"got family {cfg.family!r}")
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        self.backend = resolve_backend(backend)
+        self.params = self.backend.load(cfg, weights)
+
+        self._slots = [_Slot() for _ in range(serve_cfg.slots)]
+        self._queue: deque[RequestHandle] = deque()
+        self._ids = itertools.count()
+        self._caches = init_cache(cfg, serve_cfg.slots, serve_cfg.max_len)
+        self._rngs: dict[int, np.random.Generator] = {}
+
+        max_len = serve_cfg.max_len
+        if any(b > max_len for b in serve_cfg.prefill_buckets):
+            raise ValueError(f"prefill bucket exceeds max_len {max_len}")
+        self._prefill = jax.jit(
+            lambda p, toks: prefill(p, cfg, tokens=toks, max_len=max_len))
+
+        def prefill_padded(p, toks, last_idx):
+            # padded admission: gather the last *real* prompt position per
+            # row before the head projection (pad tail is causally
+            # invisible, and the head only ever sees one position)
+            caches = init_cache(cfg, toks.shape[0], max_len)
+            logits, new_caches, _ = forward(p, cfg, tokens=toks,
+                                            caches=caches,
+                                            last_index=last_idx)
+            return logits[:, 0, :], new_caches
+        self._prefill_padded = jax.jit(prefill_padded)
+        self._decode = jax.jit(
+            lambda p, caches, tok, pos: decode_step(p, cfg, caches, pos,
+                                                    tokens=tok))
+        self._scatter = jax.jit(self._scatter_impl)
+
+    @classmethod
+    def from_container(cls, cfg: ModelConfig, blob: bytes, *,
+                       backend="container",
+                       serve_cfg: ServeConfig | None = None
+                       ) -> "ServeSession":
+        """Build a session straight from a DCBC deployment artifact."""
+        return cls(cfg, blob, backend=backend, serve_cfg=serve_cfg)
+
+    # -- client API ----------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int,
+               temperature: float = 0.0, seed=None) -> RequestHandle:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("prompt must contain at least one token")
+        if prompt.size + max_new_tokens > self.serve_cfg.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens "
+                f"({max_new_tokens}) exceeds slot capacity "
+                f"{self.serve_cfg.max_len}")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        req = RequestHandle(id=next(self._ids), prompt=prompt,
+                            max_new_tokens=max_new_tokens,
+                            temperature=temperature, seed=seed)
+        self._queue.append(req)
+        return req
+
+    @property
+    def num_queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def num_active(self) -> int:
+        return sum(s.req is not None for s in self._slots)
+
+    @property
+    def pending(self) -> bool:
+        return bool(self._queue) or self.num_active > 0
+
+    def run(self, max_steps: int | None = None) -> None:
+        """Step until every submitted request finished (or max_steps)."""
+        steps = 0
+        while self.pending:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+
+    # -- scheduler -----------------------------------------------------------
+
+    def step(self) -> None:
+        """One scheduler tick: admit onto free slots, then one batched
+        decode step over all slots, then evict finished requests."""
+        self._admit()
+        if self.num_active == 0:
+            return
+        tok = np.zeros(len(self._slots), np.int32)
+        pos = np.zeros(len(self._slots), np.int32)
+        for i, slot in enumerate(self._slots):
+            if slot.req is not None:
+                tok[i] = slot.next_token
+                pos[i] = slot.pos
+        logits, self._caches = self._decode(
+            self.params, self._caches, jnp.asarray(tok), jnp.asarray(pos))
+        logits = np.asarray(logits)
+        for i, slot in enumerate(self._slots):
+            if slot.req is None:
+                continue
+            slot.pos += 1
+            nxt = self._sample(logits[i], slot.req)
+            slot.req.tokens.append(nxt)
+            slot.next_token = nxt
+            self._maybe_evict(slot)
+
+    def _admit(self) -> None:
+        """Admit queued requests onto free slots.  The FIFO prefix sharing
+        one (bucketed) prefill length is admitted as a single batched
+        prefill — so a same-length burst (the ServeEngine wrapper's whole
+        batch) costs one forward pass, not one per request."""
+        while self._queue:
+            free = [i for i, s in enumerate(self._slots) if s.req is None]
+            if not free:
+                return
+            length = self._bucket_len(self._queue[0].prompt.size)
+            group = []
+            for req in itertools.islice(self._queue, len(free)):
+                if self._bucket_len(req.prompt.size) != length:
+                    break
+                group.append(req)
+            for _ in group:
+                self._queue.popleft()
+            slots_idx = free[:len(group)]
+
+            toks = np.zeros((len(group), length), np.int32)
+            for j, req in enumerate(group):
+                toks[j, :req.prompt.size] = req.prompt
+            if any(req.prompt.size < length for req in group):
+                logits, caches_g = self._prefill_padded(
+                    self.params, jnp.asarray(toks),
+                    jnp.asarray([r.prompt.size - 1 for r in group],
+                                jnp.int32))
+            else:
+                logits, caches_g = self._prefill(self.params,
+                                                 jnp.asarray(toks))
+            self._place(caches_g, slots_idx)
+            logits = np.asarray(logits)
+            for j, req in enumerate(group):
+                slot = self._slots[slots_idx[j]]
+                first = self._sample(logits[j], req)
+                req.tokens.append(first)
+                slot.req = req
+                slot.pos = req.prompt.size
+                slot.next_token = first
+                self._maybe_evict(slot)
+
+    def _place(self, caches_g, slots_idx: list) -> None:
+        """Scatter a batch-k prefill's caches into slots ``slots_idx``:
+        one contiguous write when the slots are adjacent (the common case
+        on an idle session), per-row writes otherwise."""
+        if slots_idx == list(range(slots_idx[0],
+                                   slots_idx[0] + len(slots_idx))):
+            self._caches = self._scatter(
+                self._caches, caches_g,
+                jnp.asarray(slots_idx[0], jnp.int32))
+            return
+        for j, slot_i in enumerate(slots_idx):
+            row = jax.tree.map(lambda a: a[:, j:j + 1], caches_g)
+            self._caches = self._scatter(self._caches, row,
+                                         jnp.asarray(slot_i, jnp.int32))
+
+    def _maybe_evict(self, slot: _Slot) -> None:
+        req = slot.req
+        eos = self.serve_cfg.eos_token
+        if eos is not None and req.tokens[-1] == eos:
+            req.finish_reason = "eos"
+        elif len(req.tokens) >= req.max_new_tokens:
+            req.finish_reason = "length"
+        elif slot.pos >= self.serve_cfg.max_len:
+            req.finish_reason = "length"
+        else:
+            return
+        req.done = True
+        self._rngs.pop(req.id, None)
+        slot.req = None
+        slot.pos = 0
+        slot.next_token = 0
+
+    # -- helpers -------------------------------------------------------------
+
+    def _bucket_len(self, n: int) -> int:
+        """Smallest configured prefill bucket >= n (n itself if none)."""
+        fits = [b for b in self.serve_cfg.prefill_buckets if b >= n]
+        return min(fits) if fits else n
+
+    @staticmethod
+    def _scatter_impl(caches, caches1, slot_idx):
+        """Write a batch=1 prefill's caches into slot ``slot_idx`` (every
+        cache leaf carries the slot axis at position 1)."""
+        return jax.tree.map(
+            lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), slot_idx, axis=1),
+            caches, caches1)
+
+    def _sample(self, logits_row: np.ndarray, req: RequestHandle) -> int:
+        if req.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        rng = self._rngs.get(req.id)
+        if rng is None:
+            # per-request seed (reproducible across sessions) or a
+            # session-seed + request-id derivation
+            key = (req.seed if req.seed is not None
+                   else (self.serve_cfg.seed, req.id))
+            rng = np.random.default_rng(key)
+            self._rngs[req.id] = rng
+        z = logits_row.astype(np.float64) / req.temperature
+        return int(np.argmax(z + rng.gumbel(size=z.shape)))

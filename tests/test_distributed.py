@@ -118,6 +118,18 @@ def test_cross_pod_psum_compressed():
         pytest.skip("needs >= 2 devices (see test_dryrun_mini subprocess)")
 
 
+def test_cross_pod_shape_contract_validated():
+    """The collective's contract is explicit: x must lead with the pod axis
+    (one partial sum per pod); anything else is rejected up front instead
+    of silently mis-summing via the old ndim-based keepdims branch."""
+    from repro.distributed.compress import cross_pod_psum_compressed
+    mesh = FakeMesh({"pod": 2, "data": 2})
+    with pytest.raises(ValueError, match="pod axis"):
+        cross_pod_psum_compressed(jnp.ones((3, 4, 128)), mesh)
+    with pytest.raises(ValueError, match="pod axis"):
+        cross_pod_psum_compressed(jnp.ones(()), mesh)
+
+
 def test_code_entropy_reporting():
     rng = np.random.default_rng(3)
     codes = jnp.asarray(rng.integers(-10, 10, 10000), jnp.int8)

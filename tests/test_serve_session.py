@@ -1,0 +1,366 @@
+"""Request-level serving: scheduler behaviour (mixed prompt lengths,
+staggered admission, EOS eviction), backend greedy-token equivalence, and
+the container backend's layer-bound streaming load."""
+
+import gc
+import tracemalloc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compression
+from repro.configs import get_smoke_config
+from repro.models.transformer import decode_step, init_params, prefill
+from repro.serve.backends import available_backends, get_backend
+from repro.serve.engine import ServeEngine
+from repro.serve.quantized import (calibrate_kv_cache_delta, is_q8,
+                                   quantize_params_for_serving)
+from repro.serve.session import ServeConfig, ServeSession
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke_config("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _isolated_greedy(cfg, params, prompt: np.ndarray, steps: int,
+                     max_len: int = 64) -> list:
+    """Reference: one request alone through the scalar-cache_pos path."""
+    toks = jnp.asarray(prompt[None, :], jnp.int32)
+    logits, caches = prefill(params, cfg, tokens=toks, max_len=max_len)
+    out = [int(jnp.argmax(logits[0]))]
+    for k in range(steps - 1):
+        logits, caches = decode_step(
+            params, cfg, caches, int(prompt.size) + k,
+            tokens=jnp.asarray([out[-1]], jnp.int32))
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+# -- scheduler ---------------------------------------------------------------
+
+def test_mixed_lengths_staggered_admission_matches_isolated(smoke):
+    """5 requests with different prompt lengths through 2 KV slots: every
+    request's continuous-batched tokens equal its isolated greedy decode,
+    despite staggered admission and slot reuse."""
+    cfg, params = smoke
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 9, 7, 12, 4)]
+    session = ServeSession(cfg, params,
+                           serve_cfg=ServeConfig(slots=2, max_len=64))
+    handles = [session.submit(p, max_new_tokens=6) for p in prompts]
+    assert session.num_queued == 5 and session.num_active == 0
+    session.run()
+    assert session.num_queued == 0 and session.num_active == 0
+    for h, p in zip(handles, prompts):
+        assert h.done and h.finish_reason == "length"
+        assert list(h.result()) == _isolated_greedy(cfg, params, p, 6)
+
+
+def test_token_streams_drain_incrementally(smoke):
+    cfg, params = smoke
+    session = ServeSession(cfg, params,
+                           serve_cfg=ServeConfig(slots=1, max_len=32))
+    h = session.submit(np.arange(4, dtype=np.int32), max_new_tokens=4)
+    seen = []
+    while session.pending:
+        session.step()
+        seen.extend(h.new_tokens())
+    assert h.new_tokens() == []          # drained
+    assert seen == list(h.result())
+    assert len(seen) == 4
+
+
+def test_eos_eviction_frees_slot_early(smoke):
+    """A request that emits EOS is evicted immediately and its slot admits
+    the next queued request, whose tokens still match isolated decode."""
+    cfg, params = smoke
+    rng = np.random.default_rng(1)
+    p1 = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    ref1 = _isolated_greedy(cfg, params, p1, 8)
+    eos = ref1[3]                         # a token greedy decode will emit
+    cut = ref1.index(eos) + 1             # ... first at this position
+    session = ServeSession(
+        cfg, params,
+        serve_cfg=ServeConfig(slots=1, max_len=64, eos_token=eos))
+    h1 = session.submit(p1, max_new_tokens=8)
+    h2 = session.submit(p2, max_new_tokens=5)
+    session.run()
+    assert h1.finish_reason == "eos"
+    assert list(h1.result()) == ref1[:cut]        # stops at (and keeps) EOS
+    assert len(h1.tokens) < 8                     # evicted early
+    assert h2.done
+    # h2 ran in the slot h1 vacated; its stream must be unaffected
+    ref2 = _isolated_greedy(cfg, params, p2, 5)
+    expect2 = ref2[:ref2.index(eos) + 1] if eos in ref2 else ref2
+    assert list(h2.result()) == expect2
+
+
+def test_submit_validates_capacity(smoke):
+    cfg, params = smoke
+    session = ServeSession(cfg, params,
+                           serve_cfg=ServeConfig(slots=1, max_len=16))
+    with pytest.raises(ValueError):
+        session.submit(np.zeros(12, np.int32), max_new_tokens=8)
+
+
+def test_session_rejects_zero_slots(smoke):
+    """slots=0 would make run() spin forever (nothing can ever admit)."""
+    cfg, params = smoke
+    with pytest.raises(ValueError, match="slots"):
+        ServeSession(cfg, params, serve_cfg=ServeConfig(slots=0))
+
+
+def test_submit_rejects_empty_prompt(smoke):
+    cfg, params = smoke
+    session = ServeSession(cfg, params,
+                           serve_cfg=ServeConfig(slots=1, max_len=16))
+    with pytest.raises(ValueError, match="at least one token"):
+        session.submit(np.array([], np.int32), max_new_tokens=4)
+
+
+def test_container_load_validates_against_template(smoke):
+    """A blob for a different architecture fails at load time, not deep
+    inside forward()."""
+    cfg, params = smoke
+    blob = compression.get("serve-q8").compress(params).blob
+    other = get_smoke_config("qwen3-8b")
+    with pytest.raises((ValueError, KeyError)):
+        get_backend("container").load(other, blob)
+
+
+def test_container_load_rejects_missing_tensors(smoke):
+    cfg, params = smoke
+    flat = compression.flatten_tree(params)
+    flat.pop("embed")
+    blob = compression.get("raw").compress(flat).blob
+    with pytest.raises(KeyError, match="missing"):
+        get_backend("container").load(cfg, blob)
+
+
+def test_bucketed_prefill_matches_exact(smoke):
+    """Padded-bucket admission (dense family): identical tokens to the
+    exact-length prefill path — pad tokens are causally invisible and
+    their stale KV is masked/overwritten."""
+    cfg, params = smoke
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (3, 5, 9, 14)]
+
+    def run(buckets):
+        session = ServeSession(
+            cfg, params, serve_cfg=ServeConfig(slots=2, max_len=64,
+                                               prefill_buckets=buckets))
+        handles = [session.submit(p, max_new_tokens=6) for p in prompts]
+        session.run()
+        return [list(h.result()) for h in handles]
+
+    assert run(()) == run((8, 16))
+
+
+def test_prefill_buckets_rejected_for_stateful_families():
+    cfg = get_smoke_config("mamba2-2.7b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="dense"):
+        ServeSession(cfg, params,
+                     serve_cfg=ServeConfig(slots=1, max_len=32,
+                                           prefill_buckets=(16,)))
+
+
+def test_temperature_sampling_reproducible(smoke):
+    """Same seed -> same sampled tokens, across engine calls and fresh
+    sessions alike."""
+    cfg, params = smoke
+    rng = np.random.default_rng(6)
+    prompts = rng.integers(0, cfg.vocab_size, (2, 6)).astype(np.int32)
+    eng = ServeEngine(cfg, params, max_len=32)
+    a = eng.generate(prompts, steps=6, temperature=1.0, seed=0)
+    b = eng.generate(prompts, steps=6, temperature=1.0, seed=0)
+    c = eng.generate(prompts, steps=6, temperature=1.0, seed=1)
+    assert np.array_equal(a, b)           # reused session, same seed
+    assert not np.array_equal(a, c)       # different seed re-rolls
+    eng2 = ServeEngine(cfg, params, max_len=32)
+    assert np.array_equal(a, eng2.generate(prompts, steps=6,
+                                           temperature=1.0, seed=0))
+
+
+def test_engine_wrapper_matches_session(smoke):
+    """ServeEngine stays the one-shot batch API over the session."""
+    cfg, params = smoke
+    rng = np.random.default_rng(2)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8)).astype(np.int32)
+    eng = ServeEngine(cfg, params, max_len=32)
+    out = eng.generate(prompts, steps=5)
+    assert out.shape == (3, 13)
+    assert np.array_equal(out[:, :8], prompts)
+    for i in range(3):
+        assert list(out[i, 8:]) == _isolated_greedy(
+            cfg, params, prompts[i], 5, max_len=32)
+
+
+# -- weight backends ---------------------------------------------------------
+
+def test_backend_registry_lists_builtins():
+    assert {"bf16", "q8", "container"} <= set(available_backends())
+    with pytest.raises(KeyError):
+        get_backend("no-such-backend")
+
+
+def test_backends_identical_greedy_tokens(smoke):
+    """Acceptance: bf16, q8 and container backends emit identical greedy
+    tokens via ServeSession on weights representable on the q8 grid (the
+    three paths then differ only in storage/dequant placement)."""
+    cfg, params = smoke
+    q8_tree = quantize_params_for_serving(params)
+    # q8-grid-exact full-precision weights: dequantize the q8 leaves
+    # (stacked (L, ..., out) scales broadcast per layer)
+
+    def deq(leaf):
+        if is_q8(leaf):
+            q8, s = leaf["q8"], leaf["q8s"]
+            if q8.ndim >= 3 and s.ndim == 2:
+                s = s.reshape(s.shape[0], *([1] * (q8.ndim - 2)), s.shape[-1])
+            return (q8.astype(jnp.float32) * s).astype(jnp.float32)
+        return leaf
+    fp_tree = jax.tree.map(deq, q8_tree, is_leaf=is_q8)
+    blob = compression.get("serve-q8").compress(params).blob
+
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (6, 11, 8)]
+    outs = {}
+    for backend, src in [("bf16", fp_tree), ("q8", q8_tree),
+                         ("container", blob)]:
+        session = ServeSession(cfg, src, backend=backend,
+                               serve_cfg=ServeConfig(slots=2, max_len=48))
+        handles = [session.submit(p, max_new_tokens=8) for p in prompts]
+        session.run()
+        outs[backend] = [list(h.result()) for h in handles]
+    assert outs["bf16"] == outs["q8"]
+    assert outs["q8"] == outs["container"]
+
+
+def test_container_backend_keeps_q8_records_int8(smoke):
+    cfg, params = smoke
+    blob = compression.get("serve-q8").compress(params).blob
+    tree = get_backend("container").load(cfg, blob)
+    assert is_q8(tree["layers"]["attn"]["wq"])
+    assert tree["layers"]["attn"]["wq"]["q8"].dtype == jnp.int8
+    assert not is_q8(tree["layers"]["attn_norm"])   # stays full precision
+
+
+# -- streaming container load ------------------------------------------------
+
+def test_iter_decompress_is_per_tensor_streaming():
+    """The decode iterator yields one tensor at a time: holding only the
+    current tensor keeps the python-heap peak near one record, far below
+    the decoded total."""
+    rng = np.random.default_rng(4)
+    n_tensors, shape = 24, (64, 4096)           # 1 MiB fp32 each
+    flat = {f"t{i:02d}": rng.standard_normal(shape).astype(np.float32)
+            for i in range(n_tensors)}
+    total = sum(v.nbytes for v in flat.values())
+    blob = compression.get("raw").compress(flat).blob
+    del flat
+    gc.collect()
+
+    seen = []
+    tracemalloc.start()
+    for name, arr in compression.iter_decompress(blob):
+        seen.append((name, arr.shape))
+        # arr dropped before the next record decodes
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert len(seen) == n_tensors
+    assert all(s == shape for _, s in seen)
+    assert peak < total / 4, (peak, total)
+
+
+def test_container_backend_load_is_layer_bound(smoke, monkeypatch):
+    """The container backend consumes the per-tensor iterator: peak decoded
+    host memory during load stays bounded by the largest tensor (x a small
+    transient factor), never the full fp32 tree."""
+    cfg, _ = smoke
+    big = cfg.replace(d_model=256, d_ff=1024, vocab_size=4096, num_layers=8)
+    params = init_params(big, jax.random.PRNGKey(0))
+    flat = compression.flatten_tree(params)
+    total = sum(v.nbytes for v in flat.values())
+    largest = max(v.nbytes for v in flat.values())
+    assert total > 4 * largest, "fixture must discriminate layer vs model"
+    blob = compression.get("raw").compress(flat).blob
+    del flat, params
+    gc.collect()
+
+    import repro.serve.backends as backends
+    pulled = []
+    real_iter = backends.iter_decompress
+
+    def spy(data, dequantize=True):
+        for item in real_iter(data, dequantize=dequantize):
+            pulled.append(item[0])
+            yield item
+    monkeypatch.setattr(backends, "iter_decompress", spy)
+
+    tracemalloc.start()
+    tree = get_backend("container").load(big, blob)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert pulled, "container backend must stream via iter_decompress"
+    assert peak < total / 2, (peak, total)       # never the full fp32 tree
+    assert peak < 3 * largest, (peak, largest)   # layer-bound transient
+    assert tree["embed"].shape == (4096, 256)
+
+
+# -- KV-cache delta (satellite: configurable, calibrated) ---------------------
+
+def test_kv_cache_delta_carried_by_serve_config(smoke):
+    cfg, params = smoke
+    session = ServeSession(
+        cfg, params, serve_cfg=ServeConfig(slots=1, max_len=32,
+                                           kv_cache_delta=0.031))
+    assert session.cfg.kv_cache_delta == 0.031
+
+
+def test_calibrated_delta_prevents_clipping(smoke):
+    """The calibrated Delta covers the observed activation range (the fixed
+    1/16 grid clips anything beyond |x| = 127/16 ~ 7.9)."""
+    cfg, params = smoke
+    tokens = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(7), (2, 16), 0,
+                           cfg.vocab_size))
+    delta = calibrate_kv_cache_delta(cfg, params, tokens)
+    # recompute the absmax the calibration saw: levels must fit in int8
+    from repro.models.transformer import init_cache
+    _, caches = prefill(params, cfg.replace(q8_cache=False),
+                        tokens=jnp.asarray(tokens), max_len=16)
+    template = init_cache(cfg.replace(q8_cache=True), 2, 16)
+    amax = max(float(jnp.max(jnp.abs(g)))
+               for g, w in zip(jax.tree.leaves(caches),
+                               jax.tree.leaves(template))
+               if w.dtype == jnp.int8)
+    assert amax / delta <= 127.0
+    assert delta >= amax / 127.0
+
+
+def test_q8_cache_decode_respects_config_delta(smoke):
+    """Same weights, two deltas: the int8 cache grid actually changes, and
+    a sane calibrated delta keeps decode finite."""
+    cfg, params = smoke
+    qcfg = cfg.replace(q8_cache=True, kv_cache_delta=0.02)
+    toks = jax.random.randint(jax.random.PRNGKey(8), (2, 8), 0,
+                              cfg.vocab_size)
+    _, caches_a = prefill(params, qcfg, tokens=toks, max_len=12)
+    _, caches_b = prefill(params, qcfg.replace(kv_cache_delta=0.08),
+                          tokens=toks, max_len=12)
+    ka = np.asarray(caches_a["k"], np.int32)
+    kb = np.asarray(caches_b["k"], np.int32)
+    assert ka.dtype == np.int32 and not np.array_equal(ka, kb)
+    lg, _ = decode_step(params, qcfg, caches_a, 8,
+                        tokens=toks[:, 0])
+    assert np.all(np.isfinite(np.asarray(lg)))
