@@ -106,27 +106,30 @@ def bench_codec_throughput(fast: bool):
 
 def bench_rd_quant_kernel(fast: bool):
     import jax
+    from repro import kernels
     from repro.core.quant import nearest_level
     from repro.core.rate_model import estimate_bin_probs
-    from repro.kernels.rd_quant import rd_quant
+    rd_quant = kernels.get("rd_quant")
     rng = np.random.default_rng(1)
     n = (1 << 18) if fast else (1 << 20)
     w = (rng.standard_normal(n) * 0.05).astype(np.float32)
     probs = estimate_bin_probs(nearest_level(w, 0.01))
-    # jnp-ref path (the jitted production path on CPU)
-    out = rd_quant(w, None, probs, step=0.01, lam=1e-4, use_ref=True)
+    # registry default path (jnp ref on CPU, pallas on TPU)
+    out = rd_quant(w, None, probs, step=0.01, lam=1e-4)
     jax.block_until_ready(out)
     t0 = time.time()
-    out = rd_quant(w, None, probs, step=0.01, lam=1e-4, use_ref=True)
+    out = rd_quant(w, None, probs, step=0.01, lam=1e-4)
     jax.block_until_ready(out)
     t1 = time.time()
-    _row("rd_quant/jnp_ref", 1e6 * (t1 - t0),
-         {"weights_per_s": n / (t1 - t0), "n": n})
+    _row("rd_quant/registry_default", 1e6 * (t1 - t0),
+         {"weights_per_s": n / (t1 - t0), "n": n,
+          "impl": rd_quant.plan(w, None, probs, step=0.01, lam=1e-4).impl})
     # pallas interpret path — correctness-path timing only (Python-level;
     # the TPU perf story lives in the roofline analysis)
+    interp = kernels.KernelPolicy().override("rd_quant", "interpret")
     n2 = 1 << 15
     t0 = time.time()
-    out = rd_quant(w[:n2], None, probs, step=0.01, lam=1e-4, interpret=True)
+    out = rd_quant(w[:n2], None, probs, step=0.01, lam=1e-4, policy=interp)
     jax.block_until_ready(out)
     t1 = time.time()
     _row("rd_quant/pallas_interpret", 1e6 * (t1 - t0), {"n": n2})
@@ -135,22 +138,24 @@ def bench_rd_quant_kernel(fast: bool):
 def bench_dequant_matmul(fast: bool):
     import jax
     import jax.numpy as jnp
-    from repro.kernels.dequant_matmul import dequant_matmul
+    from repro import kernels
+    dequant_matmul = kernels.get("dequant_matmul")
     rng = np.random.default_rng(2)
     m, k, n = 256, 2048, 1024
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
     wq = jnp.asarray(rng.integers(-127, 127, (k, n)), jnp.int8)
     sc = jnp.asarray(rng.random(n) * 0.01, jnp.float32)
-    out = dequant_matmul(x, wq, sc, use_ref=True)
+    out = dequant_matmul(x, wq, sc)
     jax.block_until_ready(out)
     t0 = time.time()
     for _ in range(10):
-        out = dequant_matmul(x, wq, sc, use_ref=True)
+        out = dequant_matmul(x, wq, sc)
     jax.block_until_ready(out)
     t1 = time.time()
     us = 1e6 * (t1 - t0) / 10
-    _row("dequant_matmul/jnp_ref", us,
+    _row("dequant_matmul/registry_default", us,
          {"gflops": 2 * m * k * n / 1e9 / (us / 1e6),
+          "impl": dequant_matmul.plan(x, wq, sc).impl,
           "weight_bytes_vs_bf16": 0.5})   # int8 weights halve HBM reads
 
 

@@ -1,5 +1,22 @@
-# Pallas TPU kernels for DeepCABAC's compute hot-spots:
-#   rd_quant       — eq. (11) RD assignment (encoder hot-spot)
-#   dequant_matmul — int8-level dequantize fused into the serving matmul
+# Pallas TPU kernels for DeepCABAC's compute hot-spots, behind one
+# registry (see registry.py and docs/kernels_api.md):
+#   rd_quant        — eq. (11) RD assignment (encoder hot-spot)
+#   dequant_matmul  — int8-level dequantize fused into the serving matmul
+#   flash_attention — causal online-softmax attention (pallas/scan/ref)
+#   embed_lookup_q8 — int8 embedding-row gather (fixed-point serving)
 # Each subpackage ships kernel.py (pallas_call + BlockSpec), ops.py (jit
-# wrapper with interpret switch) and ref.py (pure-jnp oracle).
+# wrapper + OpSpec registration) and ref.py (pure-jnp oracle).  Call sites
+# outside this package go through kernels.get(name)(..., policy=...);
+# direct subpackage imports are reserved for tests and benchmarks.
+from . import registry, tune  # noqa: F401  (registry first: specs need it)
+from .registry import (  # noqa: F401
+    DEFAULT_POLICY, BoundOp, DispatchPlan, Impl, KernelDispatchError,
+    KernelPolicy, OpSpec, available_ops, clear_dispatch_report,
+    dispatch_report, get, register_op, spec)
+from .tune import TuningCache, autotune  # noqa: F401
+
+# importing the subpackages registers their OpSpecs
+from .dequant_matmul import dequant_matmul  # noqa: F401
+from .embed_lookup import embed_lookup_q8, is_q8_leaf  # noqa: F401
+from .flash_attention import flash_attention  # noqa: F401
+from .rd_quant import pack_rate_params, rd_quant  # noqa: F401

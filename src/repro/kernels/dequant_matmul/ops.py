@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the fused dequantize-matmul kernel."""
+"""jit'd public wrapper + registry spec for the fused dequantize-matmul."""
 
 from __future__ import annotations
 
@@ -6,9 +6,25 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .kernel import dequant_matmul_pallas
+from ..registry import Impl, OpSpec, register_op
+from ..tune import pow2_bucket
+from .kernel import BK, BM, BN, dequant_matmul_pallas
 from .ref import dequant_matmul_ref
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def default_tiles(m: int, k: int, n: int) -> dict:
+    """Shape-adaptive tiles.  ``bm`` clamps to the sublane-padded row count
+    so a 1-8 row decode matmul pads to 8 rows, not 256; ``bn``/``bk`` clamp
+    to the lane-padded layer dims for small heads."""
+    return {"bm": min(BM, _round_up(max(m, 1), 8)),
+            "bn": min(BN, _round_up(max(n, 1), 128)),
+            "bk": min(BK, _round_up(max(k, 1), 128))}
 
 
 def _pad_to(x: jnp.ndarray, mult: tuple[int, ...]) -> jnp.ndarray:
@@ -33,13 +49,83 @@ def _dequant_matmul_jit(x, w_q, scale, *, bm, bn, bk, interpret, use_ref):
 
 
 def dequant_matmul(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray, *,
-                   bm: int = 256, bn: int = 256, bk: int = 512,
-                   interpret: bool = False,
+                   bm: int | None = None, bn: int | None = None,
+                   bk: int | None = None, interpret: bool = False,
                    use_ref: bool = False) -> jnp.ndarray:
     """Serving matmul against DeepCABAC-quantized weights.
 
     x (M, K), w_q (K, N) int8 levels, scale (N,) per-channel Delta.
+    Tile sizes default to :func:`default_tiles` (shape-adaptive).
     """
-    return _dequant_matmul_jit(jnp.asarray(x), jnp.asarray(w_q),
-                               jnp.asarray(scale), bm=bm, bn=bn, bk=bk,
+    x, w_q, scale = jnp.asarray(x), jnp.asarray(w_q), jnp.asarray(scale)
+    tiles = default_tiles(x.shape[0], x.shape[1], w_q.shape[1])
+    return _dequant_matmul_jit(x, w_q, scale, bm=bm or tiles["bm"],
+                               bn=bn or tiles["bn"], bk=bk or tiles["bk"],
                                interpret=interpret, use_ref=use_ref)
+
+
+# ---------------------------------------------------------------------------
+# Registry spec
+# ---------------------------------------------------------------------------
+
+def _shape_info(x, w_q, scale) -> dict:
+    x, w_q = jnp.asarray(x), jnp.asarray(w_q)
+    return {"m": x.shape[0], "k": x.shape[1], "n": w_q.shape[1]}
+
+
+def _bucket(s: dict) -> str:
+    # rows are data-dependent (decode m = live batch) -> pow2 bucket;
+    # k/n are model dims -> exact
+    return f"m{pow2_bucket(s['m'])}_k{s['k']}_n{s['n']}"
+
+
+def _tile_ok(s: dict, t: dict) -> bool:
+    return (t["bm"] <= max(_round_up(s["m"], 8), 8)
+            and t["bn"] <= _round_up(s["n"], 128)
+            and t["bk"] <= _round_up(s["k"], 128))
+
+
+def _example_inputs(shape):
+    m, k, n = shape
+    rng = np.random.default_rng(m * 31 + k * 7 + n)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    wq = jnp.asarray(rng.integers(-127, 127, (k, n)), jnp.int8)
+    sc = jnp.asarray(rng.random(n) * 0.01 + 1e-4, jnp.float32)
+    return (x, wq, sc), {}
+
+
+def _run_pallas(x, w_q, scale, *, bm, bn, bk):
+    return dequant_matmul(x, w_q, scale, bm=bm, bn=bn, bk=bk)
+
+
+def _run_interpret(x, w_q, scale, *, bm, bn, bk):
+    return dequant_matmul(x, w_q, scale, bm=bm, bn=bn, bk=bk,
+                          interpret=True)
+
+
+def _run_ref(x, w_q, scale):
+    return dequant_matmul(x, w_q, scale, use_ref=True)
+
+
+@register_op
+def _dequant_matmul_spec() -> OpSpec:
+    return OpSpec(
+        name="dequant_matmul",
+        impls={
+            "pallas": Impl("pallas", _run_pallas, platforms=("tpu",)),
+            "interpret": Impl("interpret", _run_interpret),
+            "ref": Impl("ref", _run_ref, uses_tiles=False),
+        },
+        defaults={"tpu": "pallas", "*": "ref"},
+        fallbacks=("interpret", "ref"),
+        tile_space={"bm": (8, 16, 32, 64, 128, 256),
+                    "bn": (128, 256, 512),
+                    "bk": (128, 256, 512, 1024)},
+        default_tiles=lambda s: default_tiles(s["m"], s["k"], s["n"]),
+        tile_ok=_tile_ok,
+        shape_info=_shape_info,
+        bucket=_bucket,
+        example_inputs=_example_inputs,
+        oracle=dequant_matmul_ref,
+        tune_impls={"tpu": "pallas", "*": "interpret"},
+    )

@@ -1,0 +1,86 @@
+"""Pure-JAX attention impls: online-softmax scan ("scan") and naive ("ref").
+
+The scan path never materializes the full (Sq, Skv) score matrix: it
+lax.scan's over KV blocks with an online-softmax carry (running max, running
+denominator, accumulator) — the standard memory-safe formulation for 32k+
+prefill.  GQA expansion happens inside the einsum (q reshaped to
+(B, S, G, rep, D)), so K/V are never repeated in memory.  Both paths honor
+ragged per-row ``kv_len`` masks (continuous-batching decode), which the
+Pallas kernel does not — the registry records that constraint.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def online_softmax_scan(q5, k, v, qpos, kv_block: int,
+                        kv_len: jnp.ndarray | None) -> jnp.ndarray:
+    """q5 (B,Sq,G,R,D); k,v (B,Skv,G,D); qpos (B,Sq) global positions.
+    Returns (B,Sq,G,R,D)."""
+    b, sq, g, r, d = q5.shape
+    dv = v.shape[-1]
+    skv = k.shape[1]
+    nb = -(-skv // kv_block)
+    pad = nb * kv_block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nb, kv_block, g, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, kv_block, g, dv).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        k_i, v_i, i = blk
+        kpos = i * kv_block + jnp.arange(kv_block)
+        # keep K/V in their storage dtype; accumulate on the MXU in f32
+        # (an explicit astype would materialize f32 copies of the whole
+        # K/V stream in HBM — observed +8x on the decode memory term)
+        s = jnp.einsum("bsgrd,btgd->bgrst", q5, k_i,
+                       preferred_element_type=jnp.float32) * scale
+        mask = kpos[None, None, None, None, :] <= \
+            qpos[:, None, None, :, None]
+        if kv_len is not None:
+            mask &= kpos[None, None, None, None, :] < \
+                kv_len[:, None, None, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bgrst,btgd->bgrsd", p.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, g, r, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, g, r, sq), jnp.float32)
+    a0 = jnp.zeros((b, g, r, sq, dv), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0),
+                              (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q5.dtype)  # (B,Sq,G,R,D)
+
+
+def naive_attend(q5, k, v, qpos, kv_len) -> jnp.ndarray:
+    b, sq, g, r, d = q5.shape
+    skv = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    # K/V stay in storage dtype — f32 accumulation happens on the MXU
+    s = jnp.einsum("bsgrd,btgd->bgrst", q5, k,
+                   preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(skv)
+    mask = kpos[None, None, None, None, :] <= qpos[:, None, None, :, None]
+    if kv_len is not None:
+        mask &= kpos[None, None, None, None, :] < \
+            kv_len[:, None, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q5.dtype)

@@ -72,12 +72,13 @@ def _rd_quant_kernel(w_ref, f_ref, ps_ref, sc_ref, mag_ref, out_ref, *,
 def rd_quant_pallas(w2d: jnp.ndarray, f2d: jnp.ndarray, ps2d: jnp.ndarray,
                     scalars: jnp.ndarray, mag_rate: jnp.ndarray, *,
                     step: float, lam: float, window: int, max_level: int,
-                    num_gr: int, interpret: bool = False) -> jnp.ndarray:
-    """Inputs already shaped (M, LANES) with M % BLOCK_M == 0."""
+                    num_gr: int, block_m: int = BLOCK_M,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Inputs already shaped (M, LANES) with M % block_m == 0."""
     m = w2d.shape[0]
     n_classes = mag_rate.shape[-1]
-    grid = (m // BLOCK_M,)
-    tile = pl.BlockSpec((BLOCK_M, LANES), lambda i: (i, 0))
+    grid = (m // block_m,)
+    tile = pl.BlockSpec((block_m, LANES), lambda i: (i, 0))
     rep_s = pl.BlockSpec((1, scalars.shape[-1]), lambda i: (0, 0))
     rep_m = pl.BlockSpec((1, n_classes), lambda i: (0, 0))
     kernel = functools.partial(

@@ -1,0 +1,200 @@
+"""Kernel autotuner with a persistent JSON tuning cache.
+
+:func:`autotune` sweeps an op's tile-parameter search space over a list of
+shapes (decode ``m = B`` rows, prefill, train), times each feasible config
+on the current backend, and persists the winners keyed by
+``(op, platform, shape-bucket)``.  Registry dispatch
+(:meth:`registry.BoundOp.plan`) consults the cache at trace time, so a
+tuned session picks the winning tiles with no per-call cost.
+
+Cache location: ``$REPRO_KERNEL_TUNE_CACHE`` if set, else
+``~/.cache/repro/kernel_tune.json``.  Format (version 1)::
+
+    {"version": 1,
+     "entries": {"dequant_matmul/cpu/m8_k512_n512":
+                     {"tiles": {"bm": 8, "bn": 256, "bk": 512},
+                      "time_us": 123.4, "shape": [4, 512, 512]}}}
+
+Shape buckets round the data-dependent axes (rows, sequence lengths) to
+the next power of two so a cache tuned at batch 8 serves batch 5..8.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import time
+from pathlib import Path
+
+import jax
+
+ENV_VAR = "REPRO_KERNEL_TUNE_CACHE"
+CACHE_VERSION = 1
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "kernel_tune.json"
+
+
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (shape-bucket rounding)."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+class TuningCache:
+    """Persisted winners of past autotune sweeps."""
+
+    def __init__(self, path: str | Path | None = None):
+        self.path = Path(path) if path is not None else default_cache_path()
+        self.entries: dict[str, dict] = {}
+        self._load()
+
+    def _load(self) -> None:
+        try:
+            raw = json.loads(self.path.read_text())
+        except (OSError, ValueError):
+            return
+        if raw.get("version") == CACHE_VERSION:
+            self.entries = dict(raw.get("entries", {}))
+
+    @staticmethod
+    def key(op: str, platform: str, bucket: str) -> str:
+        return f"{op}/{platform}/{bucket}"
+
+    def lookup(self, op: str, platform: str, bucket: str) -> dict | None:
+        entry = self.entries.get(self.key(op, platform, bucket))
+        return dict(entry["tiles"]) if entry else None
+
+    def store(self, op: str, platform: str, bucket: str, tiles: dict,
+              time_us: float, shape=None) -> None:
+        self.entries[self.key(op, platform, bucket)] = {
+            "tiles": dict(tiles), "time_us": round(float(time_us), 3),
+            "shape": list(shape) if shape is not None else None}
+
+    def save(self) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(
+            {"version": CACHE_VERSION, "entries": self.entries},
+            indent=1, sort_keys=True))
+        tmp.replace(self.path)
+
+
+_cache: TuningCache | None = None
+
+
+def get_cache() -> TuningCache:
+    """Process-wide cache singleton; reloads if the env path changed."""
+    global _cache
+    path = default_cache_path()
+    if _cache is None or _cache.path != path:
+        _cache = TuningCache(path)
+    return _cache
+
+
+def invalidate_cache() -> None:
+    global _cache
+    _cache = None
+
+
+def lookup(op: str, platform: str, bucket: str) -> dict | None:
+    return get_cache().lookup(op, platform, bucket)
+
+
+# ---------------------------------------------------------------------------
+# Autotune
+# ---------------------------------------------------------------------------
+
+def tile_candidates(op_spec, shapes: dict) -> list[dict]:
+    """Cartesian product of the op's tile space, filtered by ``tile_ok``."""
+    keys = list(op_spec.tile_space)
+    out = []
+    for vals in itertools.product(*(op_spec.tile_space[k] for k in keys)):
+        tiles = dict(zip(keys, vals))
+        if op_spec.tile_ok is None or op_spec.tile_ok(shapes, tiles):
+            out.append(tiles)
+    if not out and op_spec.default_tiles is not None:
+        out = [dict(op_spec.default_tiles(shapes))]
+    return out
+
+
+def _time_config(fn, args, kwargs, tiles, *, repeats: int,
+                 warmup: int) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs, **tiles))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs, **tiles))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune(op: str, shapes, *, policy=None, impl: str | None = None,
+             repeats: int = 3, warmup: int = 1, cache: TuningCache | None =
+             None, save: bool = True, force: bool = False,
+             max_configs: int = 64) -> dict:
+    """Sweep ``op``'s tile space over ``shapes``; persist winners.
+
+    ``shapes`` is a list of op-specific shape tuples (see the op's
+    ``example_inputs``).  The impl timed is ``impl`` if given, else the
+    policy's pin, else the op's ``tune_impls`` entry for this platform.
+    Existing cache entries are kept unless ``force``.  Returns
+    ``{bucket: {"tiles", "time_us", "configs"}}``.
+    """
+    from . import registry
+
+    op_spec = registry.spec(op)
+    if op_spec.example_inputs is None or not op_spec.tile_space:
+        raise ValueError(f"op {op!r} has no tunable tile space")
+    policy = policy or registry.DEFAULT_POLICY
+    platform = (policy.platform if policy.platform != "auto"
+                else jax.default_backend())
+    impl_name = (impl or policy.impl_for(op)
+                 or op_spec.tune_impls.get(platform)
+                 or op_spec.tune_impls.get("*"))
+    if impl_name is None or impl_name not in op_spec.impls:
+        raise ValueError(
+            f"{op}: no tunable impl for platform {platform!r} "
+            f"(got {impl_name!r})")
+    impl_spec = op_spec.impls[impl_name]
+    cache = cache or get_cache()
+
+    results: dict[str, dict] = {}
+    for shape in shapes:
+        args, kwargs = op_spec.example_inputs(shape)
+        sh = op_spec.shape_info(*args, **kwargs)
+        if impl_spec.constraint is not None:
+            why = impl_spec.constraint(sh)
+            if why is not None:
+                results[str(shape)] = {"skipped": why}
+                continue
+        bucket = op_spec.bucket(sh) if op_spec.bucket else str(shape)
+        if not force and cache.lookup(op, platform, bucket) is not None:
+            results[bucket] = {"tiles": cache.lookup(op, platform, bucket),
+                               "cached": True}
+            continue
+        best_tiles, best_t = None, float("inf")
+        cands = tile_candidates(op_spec, sh)[:max_configs]
+        for tiles in cands:
+            t = _time_config(impl_spec.fn, args, kwargs, tiles,
+                             repeats=repeats, warmup=warmup)
+            if t < best_t:
+                best_tiles, best_t = tiles, t
+        if best_tiles is None:
+            results[bucket] = {"skipped": "no feasible tile config"}
+            continue
+        cache.store(op, platform, bucket, best_tiles, best_t * 1e6,
+                    shape=shape if isinstance(shape, (list, tuple))
+                    else [shape])
+        results[bucket] = {"tiles": best_tiles,
+                           "time_us": round(best_t * 1e6, 3),
+                           "configs": len(cands)}
+    if save:
+        cache.save()
+    return results

@@ -15,10 +15,12 @@ first so the streaming load path is still exercised.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
 
+from .. import kernels
 from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..models.transformer import init_params
 from ..serve.backends import available_backends
@@ -39,9 +41,31 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--kernel-impl", action="append", default=[],
+                    metavar="OP=IMPL",
+                    help="pin a kernel impl (repeatable), e.g. "
+                         "flash_attention=pallas dequant_matmul=interpret")
+    ap.add_argument("--strict-kernels", action="store_true",
+                    help="a pinned impl that cannot run raises instead of "
+                         "falling back (see kernels.dispatch_report)")
+    ap.add_argument("--no-tuning-cache", action="store_true",
+                    help="ignore the persistent kernel tuning cache")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    pol = cfg.kernels
+    for pin in args.kernel_impl:
+        op, _, impl = pin.partition("=")
+        if op not in kernels.available_ops():
+            ap.error(f"--kernel-impl: unknown op {op!r}; "
+                     f"available: {kernels.available_ops()}")
+        if impl not in kernels.spec(op).impls:
+            ap.error(f"--kernel-impl: unknown impl {impl!r} for {op}; "
+                     f"available: {sorted(kernels.spec(op).impls)}")
+        pol = pol.override(op, impl)
+    pol = dataclasses.replace(pol, strict=args.strict_kernels,
+                              use_tuning_cache=not args.no_tuning_cache)
+    cfg = cfg.replace(kernels=pol)
     max_len = args.prompt_len + args.steps
     if args.ckpt:
         with open(args.ckpt, "rb") as f:
@@ -69,6 +93,10 @@ def main():
     print(f"backend={args.backend} slots={scfg.slots}: generated "
           f"{out.shape} tokens; first row tail: "
           f"{out[0, -min(16, out.shape[1]):].tolist()}")
+    for rec in kernels.dispatch_report():
+        print(f"kernel fallback: {rec['op']}: "
+              f"{rec['requested'] or 'default'} -> {rec['impl']} "
+              f"({rec['reason']})")
 
 
 if __name__ == "__main__":

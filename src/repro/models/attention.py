@@ -1,18 +1,20 @@
-"""Attention: GQA (+qk-norm, +bias, +M-RoPE) and MLA, with flash-scan.
+"""Attention: GQA (+qk-norm, +bias, +M-RoPE) and MLA.
 
-The flash-scan path never materializes the full (Sq, Skv) score matrix: it
-lax.scan's over KV blocks with an online-softmax carry (running max, running
-denominator, accumulator) — the standard memory-safe formulation for 32k+
-prefill.  GQA expansion happens inside the einsum (q reshaped to
-(B, S, KVH, rep, D)), so K/V are never repeated in memory.
+The attention math itself lives in the kernel registry
+(``kernels.get("flash_attention")``): the pure-JAX online-softmax scan, the
+naive reference, and the Pallas TPU kernel are registered impls, selected
+per platform/shape by the model config's :class:`~repro.kernels.KernelPolicy`
+(``cfg.kernels``).  Constraint-driven fallbacks (ragged ``kv_len``,
+``d != dv``) are recorded in ``kernels.dispatch_report()`` and raise when a
+pinned impl meets ``KernelPolicy(strict=True)``.
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .. import kernels as _kernels
 from ..distributed.sharding import constrain
 from ..serve.quantized import dequant_cache_value, quantize_cache_value
 from .layers import apply_m_rope, apply_rope, rms_norm
@@ -47,98 +49,34 @@ def _cache_update(cache_arr, new_vals, cache_pos, delta):
     b = cache_arr.shape[0]
     return cache_arr.at[jnp.arange(b), cp].set(vals[:, 0])
 
-NEG_INF = -1e30
-
-
-def _online_softmax_scan(q5, k, v, qpos, kv_block: int,
-                         kv_len: jnp.ndarray | None) -> jnp.ndarray:
-    """q5 (B,Sq,G,R,D); k,v (B,Skv,G,D); qpos (B,Sq) global positions.
-    Returns (B,Sq,G,R,D)."""
-    b, sq, g, r, d = q5.shape
-    dv = v.shape[-1]
-    skv = k.shape[1]
-    nb = -(-skv // kv_block)
-    pad = nb * kv_block - skv
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    kb = k.reshape(b, nb, kv_block, g, d).transpose(1, 0, 2, 3, 4)
-    vb = v.reshape(b, nb, kv_block, g, dv).transpose(1, 0, 2, 3, 4)
-    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
-
-    def body(carry, blk):
-        m, l, acc = carry
-        k_i, v_i, i = blk
-        kpos = i * kv_block + jnp.arange(kv_block)
-        # keep K/V in their storage dtype; accumulate on the MXU in f32
-        # (an explicit astype would materialize f32 copies of the whole
-        # K/V stream in HBM — observed +8x on the decode memory term)
-        s = jnp.einsum("bsgrd,btgd->bgrst", q5, k_i,
-                       preferred_element_type=jnp.float32) * scale
-        mask = kpos[None, None, None, None, :] <= \
-            qpos[:, None, None, :, None]
-        if kv_len is not None:
-            mask &= kpos[None, None, None, None, :] < \
-                kv_len[:, None, None, None, None]
-        s = jnp.where(mask, s, NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[..., None])
-        corr = jnp.exp(m - m_new)
-        l = l * corr + jnp.sum(p, axis=-1)
-        acc = acc * corr[..., None] + jnp.einsum(
-            "bgrst,btgd->bgrsd", p.astype(v_i.dtype), v_i,
-            preferred_element_type=jnp.float32)
-        return (m_new, l, acc), None
-
-    m0 = jnp.full((b, g, r, sq), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((b, g, r, sq), jnp.float32)
-    a0 = jnp.zeros((b, g, r, sq, dv), jnp.float32)
-    (m, l, acc), _ = lax.scan(body, (m0, l0, a0),
-                              (kb, vb, jnp.arange(nb)))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.transpose(0, 3, 1, 2, 4).astype(q5.dtype)  # (B,Sq,G,R,D)
-
-
-def _naive_attend(q5, k, v, qpos, kv_len) -> jnp.ndarray:
-    b, sq, g, r, d = q5.shape
-    skv = k.shape[1]
-    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
-    # K/V stay in storage dtype — f32 accumulation happens on the MXU
-    s = jnp.einsum("bsgrd,btgd->bgrst", q5, k,
-                   preferred_element_type=jnp.float32) * scale
-    kpos = jnp.arange(skv)
-    mask = kpos[None, None, None, None, :] <= qpos[:, None, None, :, None]
-    if kv_len is not None:
-        mask &= kpos[None, None, None, None, :] < \
-            kv_len[:, None, None, None, None]
-    s = jnp.where(mask, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bgrst,btgd->bsgrd", p.astype(v.dtype), v,
-                     preferred_element_type=jnp.float32)
-    return out.astype(q5.dtype)
+# legacy attend(impl=...) values -> registry impl names (shared with the
+# ModelConfig deprecation shim)
+from .config import LEGACY_ATTN_IMPLS  # noqa: E402
 
 
 def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-           qpos: jnp.ndarray, *, impl: str = "scan", kv_block: int = 1024,
+           qpos: jnp.ndarray, *, impl: str | None = None,
+           policy=None, kv_block: int = 1024,
            kv_len: jnp.ndarray | None = None) -> jnp.ndarray:
     """q (B,Sq,H,D); k,v (B,Skv,G,D) with G | H.  qpos (B,Sq).
 
-    impl: "scan" (pure-JAX flash, compiles everywhere incl. the dry-run),
-    "pallas_flash" (the VMEM-resident TPU kernel; kernels/flash_attention),
-    "naive" (reference).  Decode (Sq == 1) always takes the naive path.
+    Dispatches through ``kernels.get("flash_attention")``.  ``policy``
+    (normally ``cfg.kernels``) picks the impl per platform; ``impl`` is the
+    legacy pin ("scan" / "naive" / "pallas_flash") mapped onto a policy
+    override.  Decode (Sq == 1) resolves to the naive path inside the scan
+    impl; the Pallas kernel's constraints (no ragged ``kv_len``,
+    ``d == dv``) surface via ``kernels.dispatch_report()`` or raise under
+    ``KernelPolicy(strict=True)``.
     """
-    b, sq, h, d = q.shape
-    g = k.shape[2]
-    dv = v.shape[-1]
-    if impl == "pallas_flash" and sq > 1 and kv_len is None and d == dv:
-        from ..kernels.flash_attention import flash_attention
-        return flash_attention(q, k, v, causal=True)
-    q5 = q.reshape(b, sq, g, h // g, d)
-    if impl == "scan" and sq > 1:
-        out = _online_softmax_scan(q5, k, v, qpos, kv_block, kv_len)
-    else:
-        out = _naive_attend(q5, k, v, qpos, kv_len)
-    return out.reshape(b, sq, h, dv)
+    policy = policy or _kernels.KernelPolicy()
+    if impl is not None:
+        if impl not in LEGACY_ATTN_IMPLS:
+            raise ValueError(
+                f"unknown attention impl {impl!r}; "
+                f"one of {sorted(LEGACY_ATTN_IMPLS)}")
+        policy = policy.override("flash_attention", LEGACY_ATTN_IMPLS[impl])
+    return _kernels.get("flash_attention")(q, k, v, qpos, kv_block=kv_block,
+                                           kv_len=kv_len, policy=policy)
 
 
 # ---------------------------------------------------------------------------
@@ -192,7 +130,7 @@ def gqa_attention(x, p, cfg, positions, *, cache=None, cache_pos=None,
             cache["v"], _cache_store(v, cache["v"], delta), 0, axis=1)
         new_cache = {"k": ck, "v": cv}
 
-    out = attend(q, k, v, positions, impl=cfg.attn_impl,
+    out = attend(q, k, v, positions, policy=cfg.kernels,
                  kv_block=cfg.attn_kv_block, kv_len=kv_len)
     out = jnp.einsum("bsk,kd->bsd", out.reshape(b, s, h * dh), p["wo"])
     return out, new_cache
@@ -248,7 +186,7 @@ def mla_attention(x, p, cfg, positions, *, cache=None, cache_pos=None):
         [k_nope, jnp.broadcast_to(kr[:, :, None, :],
                                   (*kr.shape[:2], h, dr))], axis=-1)
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
-    out = attend(q_full, k_full, vv, positions, impl=cfg.attn_impl,
+    out = attend(q_full, k_full, vv, positions, policy=cfg.kernels,
                  kv_block=cfg.attn_kv_block, kv_len=kv_len)
     out = jnp.einsum("bsk,kd->bsd", out.reshape(b, s, h * dv), p["wo"])
     return out, new_cache

@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .. import kernels as _kernels
 from ..distributed.sharding import constrain
-from ..serve.quantized import dequant_leaf, dequant_tree, embed_lookup_q8
+from ..serve.quantized import dequant_leaf, dequant_tree
 from .attention import gqa_attention, mla_attention
 from .config import ModelConfig
 from .layers import rms_norm, swiglu_mlp
@@ -354,8 +355,9 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
     per-row position instead (padded-bucket prefill) — both project the
     head on a single position, never the full sequence."""
     if cfg.embed_input:
-        x = embed_lookup_q8(params["embed"], tokens,
-                            jnp.dtype(cfg.compute_dtype))
+        x = _kernels.get("embed_lookup_q8")(params["embed"], tokens,
+                                            jnp.dtype(cfg.compute_dtype),
+                                            policy=cfg.kernels)
     else:
         x = embeds.astype(jnp.dtype(cfg.compute_dtype))
     x = constrain(x, "batch", "seq", None)
@@ -413,18 +415,17 @@ def _head_logits(x, params, cfg: ModelConfig):
     """Final projection.  An untied q8 head (d, V) with per-vocab-channel
     scales matches the fused dequant-matmul kernel contract exactly, so the
     fixed-point serving path reads int8 weights from HBM and dequantizes
-    in-core (kernels/dequant_matmul; impl chosen by cfg.q8_matmul_impl)."""
-    from ..kernels.dequant_matmul import dequant_matmul
+    in-core (kernels.get("dequant_matmul"); impl/tiles chosen by the
+    cfg.kernels policy — decode rows get clamped bm tiles, see
+    kernels/dequant_matmul ``default_tiles``)."""
     from ..serve.quantized import is_q8
 
     head_leaf = params["embed"] if cfg.tie_embeddings else params["head"]
     bsz, s, d = x.shape
     if not cfg.tie_embeddings and is_q8(head_leaf):
-        out = dequant_matmul(
+        out = _kernels.get("dequant_matmul")(
             x.reshape(bsz * s, d).astype(jnp.float32),
-            head_leaf["q8"], head_leaf["q8s"],
-            interpret=cfg.q8_matmul_impl == "interpret",
-            use_ref=cfg.q8_matmul_impl == "ref")
+            head_leaf["q8"], head_leaf["q8s"], policy=cfg.kernels)
         return out.reshape(bsz, s, -1)
     head = (dequant_leaf(head_leaf, jnp.float32).T if cfg.tie_embeddings
             else dequant_leaf(head_leaf, jnp.float32))

@@ -8,9 +8,11 @@ plug in via :func:`register_backend` without touching any call site:
     ``bf16``       dequantize-on-load: full-precision leaves in memory
                    (blobs are decoded record-by-record, then dropped).
     ``q8``         fixed-point serving: eligible matmul weights become
-                   in-memory ``{"q8","q8s"}`` leaves that drive
-                   ``kernels/dequant_matmul`` and ``embed_lookup_q8``
-                   through the model (int8 HBM reads, in-core dequant).
+                   in-memory ``{"q8","q8s"}`` leaves that drive the
+                   ``dequant_matmul`` and ``embed_lookup_q8`` registry ops
+                   (kernels.get(...); impl/tiles picked by the model's
+                   KernelPolicy) through the model (int8 HBM reads,
+                   in-core dequant).
     ``container``  the paper's deployment artifact: stream-decode a DCBC
                    blob via the per-tensor iterator
                    (``compression.iter_decompress``), so peak decoded host
@@ -173,9 +175,9 @@ class Bf16Backend(WeightBackend):
 class Q8Backend(WeightBackend):
     """In-memory fixed-point serving: matmul weights become
     ``{"q8","q8s"}`` leaves (per-out-channel int8 + Delta), which the
-    model dequantizes in-core after int8 HBM reads
-    (``dequant_matmul`` head, ``embed_lookup_q8`` gather, in-scan
-    ``dequant_tree``)."""
+    model dequantizes in-core after int8 HBM reads (the
+    ``dequant_matmul`` head and ``embed_lookup_q8`` gather registry ops,
+    in-scan ``dequant_tree``)."""
 
     name = "q8"
 

@@ -22,10 +22,17 @@ from ..compression.quantizers import quantize_leaf, quantize_tree_q8  # noqa: F4
 # quantize_leaf re-exported: the per-channel int8 quantizer lives in the
 # compression package so the "serve-q8" container codec and this in-memory
 # path share one implementation.
+from .. import kernels as _kernels
+
+# DEPRECATED re-export: embed_lookup_q8 was promoted into the kernel
+# registry (kernels/embed_lookup, op "embed_lookup_q8"); import it from
+# repro.kernels or dispatch via kernels.get("embed_lookup_q8").
+embed_lookup_q8 = _kernels.embed_lookup_q8
 
 
-def is_q8(leaf) -> bool:
-    return isinstance(leaf, dict) and "q8" in leaf and "q8s" in leaf
+# single source of truth for q8-leaf detection lives beside the kernels
+# that consume the {"q8","q8s"} layout
+is_q8 = _kernels.is_q8_leaf
 
 
 def quantize_params_for_serving(params):
@@ -50,16 +57,6 @@ def dequant_tree(tree, dtype):
     sees int8 reads, not a materialized bf16 copy of the whole model)."""
     return jax.tree.map(lambda x: dequant_leaf(x, dtype), tree,
                         is_leaf=is_q8)
-
-
-def embed_lookup_q8(embed_leaf, tokens, dtype):
-    """Gather int8 rows first, dequantize after — the gather reads B*S rows
-    of int8 instead of the full-precision table."""
-    if is_q8(embed_leaf):
-        rows = jnp.take(embed_leaf["q8"], tokens, axis=0)
-        return (rows.astype(jnp.float32)
-                * embed_leaf["q8s"]).astype(dtype)
-    return jnp.take(embed_leaf, tokens, axis=0).astype(dtype)
 
 
 # -- int8 KV cache -------------------------------------------------------------

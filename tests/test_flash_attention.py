@@ -56,3 +56,53 @@ def test_flash_ref_is_causal():
     out2 = flash_attention_ref(q, k2, v2, causal=True)
     np.testing.assert_allclose(np.asarray(out1[:, :-1]),
                                np.asarray(out2[:, :-1]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Regression: the old `attend` silently dropped to naive when pallas_flash
+# was requested with ragged kv_len or d != dv.  Now the downgrade is
+# recorded in kernels.dispatch_report() and raises under strict policies.
+# ---------------------------------------------------------------------------
+
+def _ragged_inputs():
+    rng = np.random.default_rng(21)
+    q = jnp.asarray(rng.standard_normal((2, 16, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 16, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 16, 2, 32)), jnp.float32)
+    qpos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+    kv_len = jnp.asarray([9, 16], jnp.int32)
+    return q, k, v, qpos, kv_len
+
+
+def test_pallas_flash_kv_len_fallback_is_recorded():
+    from repro import kernels
+    kernels.clear_dispatch_report()
+    q, k, v, qpos, kv_len = _ragged_inputs()
+    pol = kernels.KernelPolicy(platform="tpu").override(
+        "flash_attention", "pallas")
+    out = attend(q, k, v, qpos, policy=pol, kv_len=kv_len)
+    # fell back to a kv_len-aware path, and said so
+    want = attend(q, k, v, qpos, impl="naive", kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    recs = [r for r in kernels.dispatch_report()
+            if r["op"] == "flash_attention" and r["requested"] == "pallas"]
+    assert recs and "kv_len" in recs[0]["reason"]
+    kernels.clear_dispatch_report()
+
+
+def test_pallas_flash_kv_len_strict_raises():
+    from repro import kernels
+    q, k, v, qpos, kv_len = _ragged_inputs()
+    pol = kernels.KernelPolicy(platform="tpu", strict=True).override(
+        "flash_attention", "pallas")
+    with pytest.raises(kernels.KernelDispatchError, match="kv_len"):
+        attend(q, k, v, qpos, policy=pol, kv_len=kv_len)
+    # d != dv mismatch raises too
+    v8 = v[..., :8]
+    with pytest.raises(kernels.KernelDispatchError, match="d != dv"):
+        attend(q, k, v8, qpos, policy=pol)
+    # but a satisfiable strict request runs
+    out = attend(q, k, v, qpos, policy=pol.override(
+        "flash_attention", "interpret"))
+    assert out.shape == q.shape

@@ -94,3 +94,38 @@ def test_dequant_matmul_matches_dequantized_dense():
     dense = x @ (wq.astype(np.float32) * step)
     out = np.asarray(dequant_matmul(x, wq, sc, interpret=True))
     np.testing.assert_allclose(out, dense, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("step,lam", [(0.004, 1e-5), (0.008, 2e-4),
+                                      (0.016, 1e-3)])
+def test_rd_quant_kernel_vs_rd_assign_grid(step, lam):
+    """Differential pin over a lambda/step grid: the interpret-mode kernel
+    and the core.quant.rd_assign numpy oracle can't drift."""
+    w = _weights(int(step * 1e4) + int(lam * 1e6), 20000)
+    nn = nearest_level(w, step)
+    probs = estimate_bin_probs(nn)
+    max_level = int(np.abs(nn).max()) + 8
+    table = build_rate_table(probs, max_level)
+    oracle = rd_assign(w.astype(np.float64), None, step, lam, table,
+                       window=4, max_level=max_level, passes=2)
+    kern = np.asarray(rd_quant(w, None, probs, step=step, lam=lam,
+                               window=4, max_level=max_level, passes=2,
+                               interpret=True))
+    agree = np.mean(kern == oracle)
+    assert agree > 0.999, \
+        f"kernel vs rd_assign agreement {agree} at step={step} lam={lam}"
+    # distortion sanity: chosen levels never leave the clip range
+    assert np.abs(kern).max() <= max_level
+
+
+def test_dequant_matmul_adaptive_bm_matches_fixed():
+    """Tile choice must not change the math: decode-clamped bm == old
+    fixed bm=256 result."""
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.standard_normal((4, 384)), jnp.float32)
+    wq = jnp.asarray(rng.integers(-127, 127, (384, 256)), jnp.int8)
+    sc = jnp.asarray(rng.random(256) * 0.01, jnp.float32)
+    small = np.asarray(dequant_matmul(x, wq, sc, interpret=True))   # bm=8
+    fixed = np.asarray(dequant_matmul(x, wq, sc, bm=256, bn=256, bk=384,
+                                      interpret=True))
+    np.testing.assert_allclose(small, fixed, rtol=1e-5, atol=1e-5)
