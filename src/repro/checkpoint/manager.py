@@ -160,13 +160,20 @@ class CheckpointManager:
                 shardings=None):
         """Rebuild ``template_state``'s pytree from disk.  ``shardings`` (a
         matching pytree of NamedSharding) enables elastic re-placement on a
-        different mesh than the one that saved."""
+        different mesh than the one that saved.
+
+        Cold-start decode is batched: every CABAC chunk in the params
+        container joins one lane-parallel decode batch
+        (``repro.core.cabac_vec``) instead of the serial per-chunk loop —
+        restore is a whole-model load, so model-bound decoded memory is
+        already implied."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError("no checkpoints found")
         d = os.path.join(self.cfg.directory, f"step_{step:08d}")
         with open(os.path.join(d, "params.dcbc"), "rb") as f:
-            params = decompress(f.read(), like=template_state["params"])
+            params = decompress(f.read(), like=template_state["params"],
+                                batched=True)
         with open(os.path.join(d, "state.npz"), "rb") as f:
             other = dict(np.load(f, allow_pickle=False))
         rest_t = {k: v for k, v in template_state.items() if k != "params"}

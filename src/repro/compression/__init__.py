@@ -9,8 +9,9 @@ same three strategies behind one :class:`Codec`:
     artifact = codec.compress(params)              # any jax pytree
     tree = compression.decompress(artifact.blob, like=params)
 
-Registered codecs: ``deepcabac-v2``, ``ckpt-nearest``, ``serve-q8``,
-``huffman``, ``raw`` (see docs/compression_api.md).
+Registered codecs: ``deepcabac-v2``, ``deepcabac-v3`` (lane-scheduled
+CABAC, container v3), ``ckpt-nearest``, ``serve-q8``, ``huffman``,
+``raw`` (see docs/compression_api.md).
 
 Import discipline: only the leaf modules (``artifact``, ``q8``, ``tree``)
 load eagerly — they import nothing from ``repro.core``.  The strategy /
@@ -28,8 +29,10 @@ _LAZY = {
     "Codec": "codec",
     "decompress": "codec",
     "iter_decompress": "codec",
+    "DecodeOptions": "codec",
     "EntropyCoder": "coders",
     "CabacCoder": "coders",
+    "CabacV3Coder": "coders",
     "HuffmanCoder": "coders",
     "RawLevelCoder": "coders",
     "Quantizer": "quantizers",

@@ -15,7 +15,8 @@ from typing import Callable
 
 import numpy as np
 
-from ..core.codec import (compressed_size_report, decode_state_dict,
+from ..core.codec import (DecodeOptions, compressed_size_report,
+                          decode_state_dict, decode_state_dict_batched,
                           iter_decode_state_dict)
 from ..core.container import ContainerWriter
 from .artifact import Artifact
@@ -24,24 +25,35 @@ from .quantizers import Quantizer
 from .tree import flatten_tree, unflatten_like
 
 
-def iter_decompress(blob: bytes, dequantize: bool = True):
+def iter_decompress(blob: bytes, dequantize: bool = True,
+                    opts: DecodeOptions | None = None):
     """Streaming decode of any codec's container: yields ``(name, tensor)``
     one record at a time.  A consumer that converts each tensor to its
     destination representation before advancing keeps peak decoded host
     memory bounded by the largest tensor (layer-bound, not model-bound) —
-    the contract the ``container`` serving weight backend relies on."""
-    yield from iter_decode_state_dict(blob, dequantize=dequantize)
+    the contract the ``container`` serving weight backend relies on.
+    ``opts`` tunes the lane-parallel entropy decode of v3 cabac records
+    (per-tensor batches, so the streaming bound still holds)."""
+    yield from iter_decode_state_dict(blob, dequantize=dequantize, opts=opts)
 
 
-def decompress(blob: bytes, like=None, dequantize: bool = True):
+def decompress(blob: bytes, like=None, dequantize: bool = True,
+               batched: bool = False, opts: DecodeOptions | None = None):
     """Decode any codec's container.
 
     Returns the flat ``{"a/b/c": ndarray}`` dict, or — given ``like``, a
     template pytree — the rebuilt tree with each leaf cast to the
     template's dtype.  ``dequantize=False`` yields the quantized
-    representations instead of reconstructed arrays.
+    representations instead of reconstructed arrays.  ``batched=True``
+    schedules every CABAC chunk in the container into one lane-parallel
+    decode batch (cold-start path: fastest wall-clock, model-bound
+    memory); the default decodes record by record.
     """
-    flat = decode_state_dict(blob, dequantize=dequantize)
+    if batched:
+        flat = decode_state_dict_batched(blob, dequantize=dequantize,
+                                         opts=opts)
+    else:
+        flat = decode_state_dict(blob, dequantize=dequantize, opts=opts)
     if like is None:
         return flat
     return unflatten_like(flat, like)

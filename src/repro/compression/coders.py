@@ -12,7 +12,7 @@ import numpy as np
 
 from ..core import binarization as B
 from ..core.codec import (DEFAULT_CHUNK, Q8Tensor, QuantizedTensor,
-                          encode_level_chunks)
+                          encode_level_chunks, encode_level_chunks_batched)
 from ..core.container import ContainerWriter
 from ..core.huffman import build_huffman, pack_payload
 
@@ -40,6 +40,30 @@ class CabacCoder(EntropyCoder):
         chunks = encode_level_chunks(qt.levels, self.num_gr, self.chunk_size)
         writer.add_cabac(name, qt.dtype, qt.shape, qt.step,
                          self.num_gr, self.chunk_size, chunks)
+
+
+@dataclass
+class CabacV3Coder(EntropyCoder):
+    """Lane-scheduled CABAC: chunks are encoded as a vectorized lane batch
+    (bit-identical streams to :class:`CabacCoder`) and the container
+    record carries per-chunk value counts, so readers batch every chunk
+    of a tensor — or a whole state dict — into one lane-parallel decode
+    (``repro.core.cabac_vec``).  Containers carrying these records are
+    version 3; v1/v2-era readers reject them with a versioned error."""
+
+    num_gr: int = B.DEFAULT_NUM_GR
+    chunk_size: int = DEFAULT_CHUNK
+    backend: str = "auto"          # lane engine for encode: auto | c | numpy
+
+    def add_record(self, writer, name, qt):
+        if not isinstance(qt, QuantizedTensor):
+            raise TypeError(
+                f"CabacV3Coder codes scalar-step levels, "
+                f"got {type(qt).__name__}")
+        chunks, counts = encode_level_chunks_batched(
+            qt.levels, self.num_gr, self.chunk_size, backend=self.backend)
+        writer.add_cabac_v3(name, qt.dtype, qt.shape, qt.step,
+                            self.num_gr, self.chunk_size, chunks, counts)
 
 
 @dataclass

@@ -12,7 +12,7 @@ from typing import Callable
 
 from ..core import binarization as B
 from ..core.codec import DEFAULT_CHUNK
-from .coders import CabacCoder, HuffmanCoder, RawLevelCoder
+from .coders import CabacCoder, CabacV3Coder, HuffmanCoder, RawLevelCoder
 from .codec import Codec
 from .quantizers import (NearestStdQuantizer, PerChannelInt8Quantizer,
                          RDGridQuantizer, ndim_float_policy, relative_step,
@@ -76,6 +76,32 @@ def _deepcabac_v2(delta: float = 0.01, lam: float = 0.0,
                  hyperparams=hyperparams)
 
 
+def _deepcabac_v3(delta: float = 0.01, lam: float = 0.0,
+                  num_gr: int = B.DEFAULT_NUM_GR, min_ndim: int = 2,
+                  chunk_size: int = DEFAULT_CHUNK,
+                  delta_rel: float | None = None,
+                  backend: str = "auto") -> Codec:
+    """DC-v2 quantization + lane-scheduled CABAC (container v3): the same
+    RD grid and bitstream chunks as ``deepcabac-v2``, but records carry
+    per-chunk lane metadata so cold-start decode runs the vectorized
+    engine over every chunk at once.  Use this for serving artifacts;
+    ``deepcabac-v2`` remains for blobs older readers must accept."""
+    if delta_rel is not None:
+        quantizer = RDGridQuantizer(
+            lam=lam, num_gr=num_gr,
+            step_for=lambda name, w: relative_step(w, delta_rel))
+        hyperparams = {"delta_rel": delta_rel, "lam": lam, "num_gr": num_gr}
+    else:
+        quantizer = RDGridQuantizer(delta=delta, lam=lam, num_gr=num_gr)
+        hyperparams = {"delta": delta, "lam": lam, "num_gr": num_gr}
+    return Codec("deepcabac-v3",
+                 coder=CabacV3Coder(num_gr=num_gr, chunk_size=chunk_size,
+                                    backend=backend),
+                 quantizer=quantizer,
+                 policy=ndim_float_policy(min_ndim),
+                 hyperparams=hyperparams)
+
+
 def _ckpt_nearest(delta_rel: float = 1e-3, min_ndim: int = 2,
                   num_gr: int = B.DEFAULT_NUM_GR,
                   chunk_size: int = DEFAULT_CHUNK) -> Codec:
@@ -113,6 +139,7 @@ def _raw() -> Codec:
 
 
 register("deepcabac-v2", _deepcabac_v2)
+register("deepcabac-v3", _deepcabac_v3)
 register("ckpt-nearest", _ckpt_nearest)
 register("serve-q8", _serve_q8)
 register("huffman", _huffman)

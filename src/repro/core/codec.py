@@ -9,16 +9,47 @@ registered codec produced (CABAC, Huffman, raw int8 + scales, raw).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import multiprocessing
+import os
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from dataclasses import dataclass, field
 
 import numpy as np
 
 from . import binarization as B
+from . import cabac_vec
 from .cabac import RangeDecoder, RangeEncoder
-from .container import (ENC_CABAC, ENC_HUFF, ENC_Q8, ENC_RAW,
+from .container import (ENC_CABAC, ENC_CABAC_V3, ENC_HUFF, ENC_Q8, ENC_RAW,
                         ContainerReader, ContainerWriter)
 
 DEFAULT_CHUNK = 1 << 16
+
+
+def default_lanes() -> int:
+    """Read at every ``DecodeOptions()`` construction, so setting
+    ``REPRO_CABAC_LANES`` after import still takes effect."""
+    return int(os.environ.get("REPRO_CABAC_LANES", "64"))
+
+
+@dataclass
+class DecodeOptions:
+    """How CABAC records are entropy-decoded.
+
+    ``backend`` picks the lane engine (``auto``/``c``/``numpy`` from
+    :mod:`repro.core.cabac_vec`) or ``scalar`` for the serial per-chunk
+    loop; ``lanes`` is how many chunk streams one vectorized batch
+    advances in lockstep.  ``workers``/``pool`` parallelize the scalar
+    path over a thread or process pool — it runs when
+    ``backend="scalar"`` is chosen explicitly, or as the automatic
+    fallback for lane batches the vector engines refuse (levels beyond
+    ``cabac_vec.MAX_ABS_LEVEL``, which only the arbitrary-precision
+    scalar coder can have written).
+    """
+
+    lanes: int = field(default_factory=default_lanes)
+    backend: str = "auto"     # auto | c | numpy | scalar
+    workers: int = 0          # 0 => in-line serial scalar path
+    pool: str = "thread"      # thread | process
 
 
 def resolve_dtype(name: str) -> np.dtype:
@@ -99,6 +130,81 @@ def decode_level_chunks(chunk_payloads: list[bytes], count: int,
     return out
 
 
+def encode_level_chunks_batched(levels: np.ndarray,
+                                num_gr: int = B.DEFAULT_NUM_GR,
+                                chunk_size: int = DEFAULT_CHUNK,
+                                backend: str = "auto"
+                                ) -> tuple[list[bytes], list[int]]:
+    """Chunk a flat level array and encode all chunks as one lane batch.
+
+    Returns ``(payloads, counts)`` — the per-chunk value counts are the
+    lane metadata a v3 container record stores so readers can schedule
+    decode batches without re-deriving them.  Byte-identical to
+    :func:`encode_level_chunks` per chunk.
+    """
+    flat = np.asarray(levels).ravel()
+    blocks = [flat[s:s + chunk_size]
+              for s in range(0, max(flat.size, 1), chunk_size)]
+    payloads = cabac_vec.encode_lanes(blocks, num_gr, backend=backend)
+    return payloads, [b.size for b in blocks]
+
+
+def _decode_one_chunk(args):
+    payload, n, num_gr = args
+    dec = RangeDecoder(payload, B.make_contexts(num_gr))
+    return B.decode_levels(dec, n, num_gr)
+
+
+def _decode_chunks_scalar(chunk_payloads, counts, num_gr, workers=0,
+                          pool="thread"):
+    jobs = [(bytes(p), n, num_gr) for p, n in zip(chunk_payloads, counts)]
+    if workers and len(jobs) > 1:
+        if pool == "process":
+            # spawn: fork is unsafe once jax's thread pools exist
+            ex = ProcessPoolExecutor(
+                max_workers=workers,
+                mp_context=multiprocessing.get_context("spawn"))
+        else:
+            ex = ThreadPoolExecutor(max_workers=workers)
+        with ex:
+            return list(ex.map(_decode_one_chunk, jobs))
+    return [_decode_one_chunk(j) for j in jobs]
+
+
+def decode_level_chunks_batched(chunk_payloads: list[bytes],
+                                chunk_counts: list[int],
+                                num_gr: int = B.DEFAULT_NUM_GR,
+                                opts: DecodeOptions | None = None
+                                ) -> np.ndarray:
+    """Decode independently-coded chunks as lane batches (or the scalar
+    residual path) and concatenate the levels in chunk order."""
+    opts = opts or DecodeOptions()
+    if not chunk_payloads:
+        return np.empty(0, dtype=np.int64)
+    if opts.backend == "scalar":
+        parts = _decode_chunks_scalar(chunk_payloads, chunk_counts, num_gr,
+                                      opts.workers, opts.pool)
+    else:
+        parts = []
+        lanes = max(int(opts.lanes), 1)
+        for s in range(0, len(chunk_payloads), lanes):
+            batch = [bytes(p) for p in chunk_payloads[s:s + lanes]]
+            counts = chunk_counts[s:s + lanes]
+            try:
+                parts.extend(cabac_vec.decode_lanes(
+                    batch, counts, num_gr, backend=opts.backend))
+            except OverflowError:
+                # residual scalar path: a stream in this batch carries
+                # levels beyond the lane engines' int64-safe range (only
+                # the arbitrary-precision scalar coder writes those)
+                parts.extend(_decode_chunks_scalar(
+                    batch, counts, num_gr, opts.workers, opts.pool))
+    out = (np.concatenate(parts) if parts else np.empty(0, dtype=np.int64))
+    total = int(sum(chunk_counts))
+    assert out.size == total, f"decoded {out.size} of {total} values"
+    return out
+
+
 def encode_state_dict(entries: dict[str, QuantizedTensor | np.ndarray],
                       num_gr: int = B.DEFAULT_NUM_GR,
                       chunk_size: int = DEFAULT_CHUNK) -> bytes:
@@ -117,7 +223,28 @@ def encode_state_dict(entries: dict[str, QuantizedTensor | np.ndarray],
     return w.tobytes()
 
 
-def decode_record(hdr, payload: bytes, dequantize: bool = True
+def _split_chunks(payload, chunk_lens):
+    offs, chunks = 0, []
+    for ln in chunk_lens:
+        chunks.append(payload[offs:offs + ln])
+        offs += ln
+    return chunks
+
+
+def _v3_chunk_counts(hdr) -> list[int]:
+    """Validated per-chunk lane metadata of an ENC_CABAC_V3 record."""
+    count = int(np.prod(hdr.shape)) if hdr.shape else 1
+    counts = [int(c) for c in hdr.chunk_counts]
+    if sum(counts) != hdr.total_count or hdr.total_count != count:
+        raise ValueError(
+            f"{hdr.name}: lane metadata disagrees — chunk counts sum to "
+            f"{sum(counts)}, header total {hdr.total_count}, shape wants "
+            f"{count}")
+    return counts
+
+
+def decode_record(hdr, payload: bytes, dequantize: bool = True,
+                  opts: DecodeOptions | None = None
                   ) -> np.ndarray | QuantizedTensor | Q8Tensor:
     """Decode one container record (header + payload) to its tensor."""
     if hdr.encoding == ENC_RAW:
@@ -126,12 +253,17 @@ def decode_record(hdr, payload: bytes, dequantize: bool = True
                 hdr.shape).copy()
     if hdr.encoding == ENC_CABAC:
         count = int(np.prod(hdr.shape)) if hdr.shape else 1
-        offs, chunks = 0, []
-        for ln in hdr.chunk_lens:
-            chunks.append(payload[offs:offs + ln])
-            offs += ln
+        chunks = _split_chunks(payload, hdr.chunk_lens)
         levels = decode_level_chunks(
             chunks, count, hdr.num_gr, hdr.chunk_size).reshape(hdr.shape)
+        qt = QuantizedTensor(levels=levels, step=hdr.step, dtype=hdr.dtype)
+        return qt.dequantize() if dequantize else qt
+    if hdr.encoding == ENC_CABAC_V3:
+        counts = _v3_chunk_counts(hdr)
+        chunks = _split_chunks(payload, hdr.chunk_lens)
+        # all chunks of the tensor go through the lane engine as one batch
+        levels = decode_level_chunks_batched(
+            chunks, counts, hdr.num_gr, opts).reshape(hdr.shape)
         qt = QuantizedTensor(levels=levels, step=hdr.step, dtype=hdr.dtype)
         return qt.dequantize() if dequantize else qt
     if hdr.encoding == ENC_HUFF:
@@ -153,18 +285,72 @@ def decode_record(hdr, payload: bytes, dequantize: bool = True
     raise ValueError(f"unknown encoding {hdr.encoding}")
 
 
-def iter_decode_state_dict(data: bytes, dequantize: bool = True):
+def iter_decode_state_dict(data: bytes, dequantize: bool = True,
+                           opts: DecodeOptions | None = None):
     """Per-tensor streaming decode: yields ``(name, tensor)`` record by
     record, so a consumer that converts/discards each tensor before pulling
     the next keeps peak decoded host memory bounded by the largest single
-    tensor, not the model (the container backend's load path)."""
+    tensor, not the model (the container backend's load path).  v3 cabac
+    records batch all of a tensor's chunks into one lane decode, so
+    streaming consumers still get lane-parallel entropy decode."""
     for hdr, payload in ContainerReader(data):
-        yield hdr.name, decode_record(hdr, payload, dequantize)
+        yield hdr.name, decode_record(hdr, payload, dequantize, opts)
 
 
-def decode_state_dict(data: bytes, dequantize: bool = True
+def decode_state_dict(data: bytes, dequantize: bool = True,
+                      opts: DecodeOptions | None = None
                       ) -> dict[str, np.ndarray | QuantizedTensor | Q8Tensor]:
-    return dict(iter_decode_state_dict(data, dequantize))
+    return dict(iter_decode_state_dict(data, dequantize, opts))
+
+
+def decode_state_dict_batched(data: bytes, dequantize: bool = True,
+                              opts: DecodeOptions | None = None
+                              ) -> dict:
+    """Whole-container lane scheduling: every CABAC chunk of every record
+    (v1 records derive their counts from shape/chunk_size; v3 records carry
+    them) joins one global decode batch, so lanes stay full even when
+    tensors are smaller than ``opts.lanes`` chunks.  Peak decoded host
+    memory is model-bound — this is the cold-start path (checkpoint
+    restore, offline eval), not the streaming serve path."""
+    opts = opts or DecodeOptions()
+    records = list(ContainerReader(data))
+    # One batch per num_gr (context-bank size is a per-record knob):
+    # num_gr -> (chunks, counts, [(record idx, first chunk, nchunks)])
+    groups: dict[int, tuple[list, list, list]] = {}
+    for i, (hdr, payload) in enumerate(records):
+        if hdr.encoding not in (ENC_CABAC, ENC_CABAC_V3):
+            continue
+        chunks = _split_chunks(payload, hdr.chunk_lens)
+        if hdr.encoding == ENC_CABAC_V3:
+            counts = _v3_chunk_counts(hdr)
+        else:
+            total = int(np.prod(hdr.shape)) if hdr.shape else 1
+            csz = hdr.chunk_size or total or 1
+            counts = [min(csz, total - s)
+                      for s in range(0, max(total, 1), csz)]
+        gch, gct, gspan = groups.setdefault(hdr.num_gr, ([], [], []))
+        gspan.append((i, len(gch), len(chunks)))
+        gch.extend(chunks)
+        gct.extend(counts)
+    decoded: dict[int, QuantizedTensor] = {}
+    for num_gr, (gch, gct, gspan) in groups.items():
+        flat = decode_level_chunks_batched(gch, gct, num_gr, opts)
+        offsets = np.zeros(len(gct) + 1, dtype=np.int64)
+        np.cumsum(gct, out=offsets[1:])
+        for i, first, nch in gspan:
+            hdr = records[i][0]
+            levels = flat[offsets[first]:offsets[first + nch]].reshape(
+                hdr.shape)
+            decoded[i] = QuantizedTensor(levels=levels, step=hdr.step,
+                                         dtype=hdr.dtype)
+    out: dict = {}
+    for i, (hdr, payload) in enumerate(records):
+        if i in decoded:
+            qt = decoded[i]
+            out[hdr.name] = qt.dequantize() if dequantize else qt
+        else:
+            out[hdr.name] = decode_record(hdr, payload, dequantize, opts)
+    return out
 
 
 def compressed_size_report(entries: dict, blob: bytes) -> dict[str, float]:

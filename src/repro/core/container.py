@@ -6,7 +6,8 @@ Layout (little-endian):
     per record:
       name: u16 len + utf8
       encoding: u8         (0 = raw bytes, 1 = cabac levels,
-                            2 = huffman levels, 3 = int8 levels + scales)
+                            2 = huffman levels, 3 = int8 levels + scales,
+                            4 = cabac levels + lane metadata)
       dtype str: u8 len + ascii   (original array dtype)
       ndim u8, dims u32[ndim]
       if encoding == 1:
@@ -17,16 +18,27 @@ Layout (little-endian):
       if encoding == 3:
         scale_ndim u8, scale_dims u32[scale_ndim]
                              (payload: f32 scales then int8 levels)
+      if encoding == 4:
+        step f64 | num_gr u8 | chunk_size u32 | total_count u64
+        num_chunks u32 | chunk_byte_lens u32[num_chunks]
+        chunk_counts u32[num_chunks]
       payload_len u64 | payload
 
 Version 1 containers hold only raw/cabac records; version 2 adds the
-huffman and q8 encodings.  The writer emits version 1 whenever no v2
-record type is present, so pre-existing readers and blobs stay
-byte-compatible on the common path.
+huffman and q8 encodings; version 3 adds the lane-scheduled cabac record
+(encoding 4), whose bitstream chunks are byte-identical to encoding 1 —
+only the header grows per-chunk value counts and the total count, so a
+reader can schedule all chunks of a tensor (or of a whole state dict)
+into one lane-parallel decode batch without deriving counts from shapes
+(repro.core.cabac_vec).  The writer emits the lowest version that covers
+the records present, so pre-existing readers and blobs stay
+byte-compatible on the common path, and older readers reject newer blobs
+with a versioned error instead of misparsing them.
 
 Chunks are independently decodable (fresh context state per chunk) so a
-multi-host restore can fan decode out across hosts/processes; the rate cost
-of chunking is measured in benchmarks (<1% for 64Ki chunks).
+multi-host restore can fan decode out across hosts/processes — or across
+SIMD lanes in one process; the rate cost of chunking is measured in
+benchmarks (<1% for 64Ki chunks).
 """
 
 from __future__ import annotations
@@ -39,10 +51,14 @@ import numpy as np
 MAGIC = b"DCBC"
 VERSION = 1
 VERSION_V2 = 2
+VERSION_V3 = 3
+SUPPORTED_VERSIONS = (VERSION, VERSION_V2, VERSION_V3)
+HEADER_LEN = 10          # magic + version u16 + num_records u32
 ENC_RAW = 0
 ENC_CABAC = 1
 ENC_HUFF = 2
 ENC_Q8 = 3
+ENC_CABAC_V3 = 4
 
 
 @dataclass
@@ -56,6 +72,8 @@ class RecordHeader:
     chunk_size: int = 0
     chunk_lens: tuple[int, ...] = ()
     scale_shape: tuple[int, ...] = ()
+    chunk_counts: tuple[int, ...] = ()   # v3 lane metadata
+    total_count: int = 0                 # v3: sum(chunk_counts), validated
 
 
 def _pack_str(s: str, lenfmt: str) -> bytes:
@@ -67,6 +85,7 @@ class ContainerWriter:
     def __init__(self):
         self._records: list[bytes] = []
         self._needs_v2 = False
+        self._needs_v3 = False
 
     def add_raw(self, name: str, arr: np.ndarray) -> None:
         payload = np.ascontiguousarray(arr).tobytes()
@@ -89,6 +108,31 @@ class ContainerWriter:
                + struct.pack(f"<{len(chunk_payloads)}I",
                              *[len(c) for c in chunk_payloads]))
         self._records.append(hdr + struct.pack("<Q", len(payload)) + payload)
+
+    def add_cabac_v3(self, name: str, dtype: str, shape: tuple[int, ...],
+                     step: float, num_gr: int, chunk_size: int,
+                     chunk_payloads: list[bytes],
+                     chunk_counts: list[int]) -> None:
+        """CABAC chunks with lane metadata: per-chunk value counts and the
+        total count travel in the header, so a reader can schedule every
+        chunk straight into a vectorized decode batch.  The chunk
+        bitstreams themselves are byte-identical to :meth:`add_cabac`."""
+        if len(chunk_counts) != len(chunk_payloads):
+            raise ValueError(
+                f"{len(chunk_counts)} chunk counts for "
+                f"{len(chunk_payloads)} chunk payloads")
+        total = sum(int(c) for c in chunk_counts)
+        payload = b"".join(chunk_payloads)
+        ndim = len(shape)
+        nch = len(chunk_payloads)
+        hdr = (_pack_str(name, "<H") + struct.pack("<B", ENC_CABAC_V3)
+               + _pack_str(dtype, "<B")
+               + struct.pack("<B", ndim) + struct.pack(f"<{ndim}I", *shape)
+               + struct.pack("<dBIQI", step, num_gr, chunk_size, total, nch)
+               + struct.pack(f"<{nch}I", *[len(c) for c in chunk_payloads])
+               + struct.pack(f"<{nch}I", *chunk_counts))
+        self._records.append(hdr + struct.pack("<Q", len(payload)) + payload)
+        self._needs_v3 = True
 
     def add_huffman(self, name: str, dtype: str, shape: tuple[int, ...],
                     step: float, payload: bytes) -> None:
@@ -121,20 +165,30 @@ class ContainerWriter:
         self._needs_v2 = True
 
     def tobytes(self) -> bytes:
-        version = VERSION_V2 if self._needs_v2 else VERSION
+        version = (VERSION_V3 if self._needs_v3
+                   else VERSION_V2 if self._needs_v2 else VERSION)
         head = MAGIC + struct.pack("<HI", version, len(self._records))
         return head + b"".join(self._records)
 
 
 class ContainerReader:
-    def __init__(self, data: bytes):
+    def __init__(self, data: bytes, max_version: int = VERSION_V3):
+        """``max_version`` emulates an older reader generation (compat
+        tests); production callers keep the default."""
+        if len(data) < HEADER_LEN:
+            raise ValueError(
+                f"truncated DCBC container: {len(data)} bytes, need at "
+                f"least the {HEADER_LEN}-byte header")
         if data[:4] != MAGIC:
-            raise ValueError("not a DCBC container")
+            raise ValueError("not a DCBC container (bad magic)")
         version, self.num_records = struct.unpack_from("<HI", data, 4)
-        if version not in (VERSION, VERSION_V2):
-            raise ValueError(f"unsupported container version {version}")
+        if version not in SUPPORTED_VERSIONS or version > max_version:
+            raise ValueError(
+                f"unsupported container version {version} "
+                f"(this reader handles <= {max_version})")
+        self.version = version
         self._data = data
-        self._offset = 10
+        self._offset = HEADER_LEN
 
     def __iter__(self):
         data = self._data
@@ -143,32 +197,54 @@ class ContainerReader:
         # copy per record, not an extra per-record payload copy
         view = memoryview(data)
         off = self._offset
-        for _ in range(self.num_records):
-            (nlen,) = struct.unpack_from("<H", data, off); off += 2
-            name = data[off:off + nlen].decode("utf-8"); off += nlen
-            (enc,) = struct.unpack_from("<B", data, off); off += 1
-            (dlen,) = struct.unpack_from("<B", data, off); off += 1
-            dtype = data[off:off + dlen].decode("ascii"); off += dlen
-            (ndim,) = struct.unpack_from("<B", data, off); off += 1
-            shape = struct.unpack_from(f"<{ndim}I", data, off); off += 4 * ndim
-            step, num_gr, chunk_size, nchunks = 0.0, 0, 0, 0
-            chunk_lens: tuple[int, ...] = ()
-            scale_shape: tuple[int, ...] = ()
-            if enc == ENC_CABAC:
-                step, num_gr, chunk_size, nchunks = struct.unpack_from(
-                    "<dBII", data, off)
-                off += 17
-                chunk_lens = struct.unpack_from(f"<{nchunks}I", data, off)
-                off += 4 * nchunks
-            elif enc == ENC_HUFF:
-                (step,) = struct.unpack_from("<d", data, off)
-                off += 8
-            elif enc == ENC_Q8:
-                (sndim,) = struct.unpack_from("<B", data, off); off += 1
-                scale_shape = struct.unpack_from(f"<{sndim}I", data, off)
-                off += 4 * sndim
-            (plen,) = struct.unpack_from("<Q", data, off); off += 8
+        for rec in range(self.num_records):
+            try:
+                (nlen,) = struct.unpack_from("<H", data, off); off += 2
+                name = data[off:off + nlen].decode("utf-8"); off += nlen
+                (enc,) = struct.unpack_from("<B", data, off); off += 1
+                (dlen,) = struct.unpack_from("<B", data, off); off += 1
+                dtype = data[off:off + dlen].decode("ascii"); off += dlen
+                (ndim,) = struct.unpack_from("<B", data, off); off += 1
+                shape = struct.unpack_from(f"<{ndim}I", data, off)
+                off += 4 * ndim
+                step, num_gr, chunk_size, nchunks = 0.0, 0, 0, 0
+                total = 0
+                chunk_lens: tuple[int, ...] = ()
+                chunk_counts: tuple[int, ...] = ()
+                scale_shape: tuple[int, ...] = ()
+                if enc == ENC_CABAC:
+                    step, num_gr, chunk_size, nchunks = struct.unpack_from(
+                        "<dBII", data, off)
+                    off += 17
+                    chunk_lens = struct.unpack_from(f"<{nchunks}I", data, off)
+                    off += 4 * nchunks
+                elif enc == ENC_CABAC_V3:
+                    step, num_gr, chunk_size, total, nchunks = \
+                        struct.unpack_from("<dBIQI", data, off)
+                    off += 25
+                    chunk_lens = struct.unpack_from(f"<{nchunks}I", data, off)
+                    off += 4 * nchunks
+                    chunk_counts = struct.unpack_from(
+                        f"<{nchunks}I", data, off)
+                    off += 4 * nchunks
+                elif enc == ENC_HUFF:
+                    (step,) = struct.unpack_from("<d", data, off)
+                    off += 8
+                elif enc == ENC_Q8:
+                    (sndim,) = struct.unpack_from("<B", data, off); off += 1
+                    scale_shape = struct.unpack_from(f"<{sndim}I", data, off)
+                    off += 4 * sndim
+                (plen,) = struct.unpack_from("<Q", data, off); off += 8
+            except struct.error as e:
+                raise ValueError(
+                    f"truncated DCBC record header (record {rec} of "
+                    f"{self.num_records})") from e
+            if off + plen > len(data):
+                raise ValueError(
+                    f"truncated DCBC record payload: record {rec} "
+                    f"({name!r}) wants {plen} bytes, "
+                    f"{len(data) - off} remain")
             payload = view[off:off + plen]; off += plen
             yield RecordHeader(name, enc, dtype, tuple(shape), step, num_gr,
-                               chunk_size, chunk_lens, tuple(scale_shape)), \
-                payload
+                               chunk_size, chunk_lens, tuple(scale_shape),
+                               chunk_counts, total), payload

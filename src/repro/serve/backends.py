@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..compression.codec import iter_decompress
+from ..compression.codec import DecodeOptions, iter_decompress
 from ..compression.quantizers import serve_q8_policy
 from ..compression.tree import _path_key
 from ..core.codec import Q8Tensor
@@ -39,9 +39,20 @@ from .quantized import quantize_leaf, quantize_tree_q8
 
 
 class WeightBackend:
-    """Strategy interface: one weight source -> serving parameter tree."""
+    """Strategy interface: one weight source -> serving parameter tree.
+
+    ``decode`` tunes the entropy-decode of container blobs at cold start:
+    v3 cabac records route every chunk of a tensor through the
+    lane-parallel engine (``repro.core.cabac_vec``) as one batch, so the
+    backend keeps the layer-bound streaming contract *and* vectorized
+    decode.  Defaults come from ``DecodeOptions()`` (env-tunable lanes /
+    engine).
+    """
 
     name = "?"
+
+    def __init__(self, decode: DecodeOptions | None = None):
+        self.decode = decode or DecodeOptions()
 
     def load(self, cfg, source):
         raise NotImplementedError
@@ -102,7 +113,8 @@ def _insert(tree: dict, name: str, leaf) -> None:
     node[parts[-1]] = leaf
 
 
-def _stream_tree(cfg, blob: bytes, convert) -> dict:
+def _stream_tree(cfg, blob: bytes, convert,
+                 decode: DecodeOptions | None = None) -> dict:
     """Fold the per-tensor decode iterator into a nested params dict.
 
     ``convert(name, record, dtype)`` maps one decoded record to its final
@@ -118,7 +130,7 @@ def _stream_tree(cfg, blob: bytes, convert) -> dict:
     specs = _template_specs(cfg)
     tree: dict = {}
     seen: set = set()
-    for name, record in iter_decompress(blob, dequantize=False):
+    for name, record in iter_decompress(blob, dequantize=False, opts=decode):
         spec = specs.get(name)
         if spec is None:
             continue                       # not part of this model
@@ -168,7 +180,8 @@ class Bf16Backend(WeightBackend):
     def load(self, cfg, source):
         if isinstance(source, (bytes, bytearray, memoryview)):
             return _stream_tree(cfg, bytes(source),
-                                lambda name, rec, dt: _to_array(rec, dt))
+                                lambda name, rec, dt: _to_array(rec, dt),
+                                decode=self.decode)
         return source
 
 
@@ -190,7 +203,8 @@ class Q8Backend(WeightBackend):
                 if serve_q8_policy(name, arr):
                     return quantize_leaf(arr)
                 return arr
-            return _stream_tree(cfg, bytes(source), convert)
+            return _stream_tree(cfg, bytes(source), convert,
+                                decode=self.decode)
         return quantize_tree_q8(source)
 
 
@@ -213,7 +227,7 @@ class ContainerBackend(WeightBackend):
             if isinstance(rec, Q8Tensor):
                 return _q8_leaf(rec)
             return _to_array(rec, dt)
-        return _stream_tree(cfg, bytes(source), convert)
+        return _stream_tree(cfg, bytes(source), convert, decode=self.decode)
 
 
 register_backend("bf16", Bf16Backend)

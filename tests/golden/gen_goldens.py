@@ -1,0 +1,124 @@
+"""Golden-bitstream fixtures for the DCBC wire format.
+
+Every builder here is fully deterministic (arithmetic sequences, exact
+binary step sizes, no RNG) so the emitted container bytes are a function
+of the codec implementation alone.  tests/test_golden_bitstreams.py
+asserts byte-exact encode output against the committed ``*.dcbc.hex``
+fixtures and exact decode round-trips — the wire format cannot drift
+silently across refactors.
+
+Regenerate (only after an *intentional* format change, with a matching
+version bump / compat note in docs/compression_api.md):
+
+    PYTHONPATH=src python tests/golden/gen_goldens.py
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+WRAP = 64
+
+
+def _levels(n: int, spike: bool = False) -> np.ndarray:
+    """Deterministic int levels: zero runs, signed smalls, a few larger
+    Exp-Golomb-range magnitudes — every binarization branch is exercised."""
+    lv = ((np.arange(n, dtype=np.int64) * 7919) % 23) - 11
+    lv[::3] = 0
+    lv[5::31] = 17 + (np.arange(len(lv[5::31]), dtype=np.int64) % 9) * 13
+    if spike:
+        lv[n // 2] = -(1 << 20)
+    return lv
+
+
+def v1_entries() -> dict:
+    """raw + multi-chunk cabac records only -> version 1 container."""
+    from repro.core.codec import QuantizedTensor
+    return {
+        "w": QuantizedTensor(_levels(400).reshape(20, 20), 0.125, "float32"),
+        "w_bf16": QuantizedTensor(_levels(96, spike=True).reshape(8, 12),
+                                  0.5, "bfloat16"),
+        "bias": (np.arange(16, dtype=np.float32) - 8) / 4,
+    }
+
+
+def build_v1() -> bytes:
+    from repro.core.codec import encode_state_dict
+    return encode_state_dict(v1_entries(), num_gr=10, chunk_size=128)
+
+
+def v2_parts() -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    huff_levels = _levels(200)
+    q8_levels = (((np.arange(48, dtype=np.int64) * 37) % 255) - 127).astype(
+        np.int8).reshape(4, 12)
+    q8_scale = ((np.arange(12) + 1) / 64).astype(np.float32)
+    cabac_levels = _levels(150)
+    return huff_levels, q8_levels, q8_scale, cabac_levels
+
+
+def build_v2() -> bytes:
+    """huffman + q8 + cabac records -> version 2 container."""
+    from repro.core.codec import encode_level_chunks
+    from repro.core.container import ContainerWriter
+    from repro.core.huffman import build_huffman, pack_payload
+    huff_levels, q8_levels, q8_scale, cabac_levels = v2_parts()
+    w = ContainerWriter()
+    w.add_huffman("huf", "float32", (10, 20), 0.25,
+                  pack_payload(huff_levels, build_huffman(huff_levels)))
+    w.add_q8("q8", "float32", q8_levels, q8_scale)
+    w.add_cabac("cab", "float32", (150,), 0.0625, 10, 64,
+                encode_level_chunks(cabac_levels, 10, 64))
+    return w.tobytes()
+
+
+def v3_parts() -> tuple[np.ndarray, np.ndarray]:
+    return _levels(500, spike=True), _levels(33)
+
+
+def build_v3() -> bytes:
+    """lane-scheduled cabac records (+ one raw) -> version 3 container."""
+    from repro.core.codec import encode_level_chunks_batched
+    from repro.core.container import ContainerWriter
+    big, small = v3_parts()
+    w = ContainerWriter()
+    chunks, counts = encode_level_chunks_batched(big, 10, 128)
+    w.add_cabac_v3("big", "float32", (20, 25), 0.125, 10, 128,
+                   chunks, counts)
+    chunks, counts = encode_level_chunks_batched(small, 10, 128)
+    w.add_cabac_v3("small", "bfloat16", (33,), 0.5, 10, 128,
+                   chunks, counts)
+    w.add_raw("raw", (np.arange(6, dtype=np.float32) / 8).reshape(2, 3))
+    return w.tobytes()
+
+
+BUILDERS = {
+    "v1_basic": build_v1,
+    "v2_mixed": build_v2,
+    "v3_lanes": build_v3,
+}
+
+
+def fixture_path(name: str) -> str:
+    return os.path.join(HERE, f"{name}.dcbc.hex")
+
+
+def load_fixture(name: str) -> bytes:
+    with open(fixture_path(name)) as f:
+        return bytes.fromhex("".join(f.read().split()))
+
+
+def main() -> None:
+    for name, build in BUILDERS.items():
+        blob = build()
+        h = blob.hex()
+        lines = [h[i:i + WRAP] for i in range(0, len(h), WRAP)]
+        with open(fixture_path(name), "w") as f:
+            f.write("\n".join(lines) + "\n")
+        print(f"{name}: {len(blob)} bytes -> {fixture_path(name)}")
+
+
+if __name__ == "__main__":
+    main()

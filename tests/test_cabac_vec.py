@@ -1,0 +1,199 @@
+"""Differential tests: lane-parallel CABAC vs the scalar coder, per lane.
+
+Every decode (and encode) the vectorized engines produce is cross-checked
+bit-exact against ``RangeEncoder``/``RangeDecoder`` — including a
+randomized adaptation-trajectory test that drives the raw lockstep bin
+coder over arbitrary context schedules and compares the full context
+banks afterwards.  Both backends (numpy lockstep, compiled C lane kernel
+when a toolchain exists) run the same assertions.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import binarization as B
+from repro.core import cabac_vec as V
+from repro.core.cabac import ContextSet, RangeDecoder, RangeEncoder
+from repro.core.codec import (DecodeOptions, decode_level_chunks,
+                              decode_level_chunks_batched,
+                              encode_level_chunks,
+                              encode_level_chunks_batched)
+
+BACKENDS = V.available_backends()
+
+
+def _scalar_payloads(lanes, num_gr):
+    out = []
+    for lv in lanes:
+        enc = RangeEncoder(B.make_contexts(num_gr))
+        B.encode_levels(enc, np.asarray(lv, dtype=np.int64), num_gr)
+        out.append(enc.finish())
+    return out
+
+
+def _ragged_lanes(seed: int):
+    rng = np.random.default_rng(seed)
+    lanes = [
+        np.zeros(64, np.int64),                                  # all-zero
+        np.array([], np.int64),                                  # empty
+        np.array([5], np.int64),                                 # 1 element
+        (rng.standard_t(2, 257) * 3).astype(np.int64),           # heavy tail
+        (rng.standard_t(2, 100) * 2000).astype(np.int64),        # big levels
+        np.array([0, 0, 1 << 40, 0, -(1 << 40), 7], np.int64),   # wide spike
+        rng.integers(-1, 2, 513).astype(np.int64),               # dense +-1
+    ]
+    return lanes
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("num_gr", [1, 5, 10])
+def test_decode_lanes_bit_exact_vs_scalar(backend, num_gr):
+    lanes = _ragged_lanes(seed=num_gr)
+    payloads = _scalar_payloads(lanes, num_gr)
+    got = V.decode_lanes(payloads, [len(l) for l in lanes], num_gr,
+                         backend=backend)
+    for i, (g, ref) in enumerate(zip(got, lanes)):
+        assert np.array_equal(g, ref), f"{backend} lane {i} diverged"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("num_gr", [1, 10])
+def test_encode_lanes_byte_exact_vs_scalar(backend, num_gr):
+    lanes = _ragged_lanes(seed=17 + num_gr)
+    ref = _scalar_payloads(lanes, num_gr)
+    got = V.encode_lanes(lanes, num_gr, backend=backend)
+    for i, (g, r) in enumerate(zip(got, ref)):
+        assert g == r, f"{backend} lane {i}: {g.hex()} != {r.hex()}"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_cross_engine_interop(backend):
+    # scalar encode -> vec decode and vec encode -> scalar decode
+    rng = np.random.default_rng(3)
+    lv = (rng.standard_t(2, 300) * 5).astype(np.int64)
+    vec_payload = V.encode_lanes([lv], backend=backend)[0]
+    dec = RangeDecoder(vec_payload, B.make_contexts(10))
+    assert np.array_equal(B.decode_levels(dec, lv.size, 10), lv)
+
+
+def test_adaptation_trajectory_lockstep_vs_scalar():
+    """Random context schedules (with bypass bins mixed in) through the raw
+    lockstep bin coder: bits and the full per-lane context banks must track
+    the scalar coder exactly at every adaptation step."""
+    rng = np.random.default_rng(11)
+    nctx = 7
+    n_lanes, n_bins = 9, 400
+    schedules = []
+    for lane in range(n_lanes):
+        ctx = rng.integers(0, nctx, n_bins)
+        byp = rng.random(n_bins) < 0.25
+        # skew bits per context so the banks adapt away from PROB_HALF
+        bits = (rng.random(n_bins) < (0.1 + 0.8 * (ctx % 3) / 2)).astype(int)
+        schedules.append((ctx, byp, bits))
+
+    payloads, scalar_banks = [], []
+    for ctx, byp, bits in schedules:
+        cs = ContextSet(nctx)
+        enc = RangeEncoder(cs)
+        for c, bp, b in zip(ctx, byp, bits):
+            if bp:
+                enc.encode_bypass(int(b))
+            else:
+                enc.encode_bin(int(c), int(b))
+        payloads.append(enc.finish())
+        scalar_banks.append(list(cs.probs))
+
+    vdec = V.VecRangeDecoder(payloads, nctx)
+    sdecs = [RangeDecoder(p, ContextSet(nctx)) for p in payloads]
+    for t in range(n_bins):
+        ctx_t = np.asarray([s[0][t] for s in schedules], dtype=np.int64)
+        byp_t = np.asarray([s[1][t] for s in schedules], dtype=bool)
+        got = vdec.decode_bins(ctx_t, byp_t)
+        for lane, sdec in enumerate(sdecs):
+            want = (sdec.decode_bypass() if byp_t[lane]
+                    else sdec.decode_bin(int(ctx_t[lane])))
+            assert got[lane] == want == schedules[lane][2][t], \
+                f"lane {lane} bin {t}"
+        # bank must agree with each scalar decoder at every step
+        bank = vdec.bank_snapshot()
+        for lane, sdec in enumerate(sdecs):
+            assert bank[lane].tolist() == sdec.ctx.probs, \
+                f"lane {lane} bank diverged at bin {t}"
+    # ... and with the encoder-side banks after the full trajectory
+    for lane in range(n_lanes):
+        assert vdec.bank_snapshot()[lane].tolist() == scalar_banks[lane]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_chunk_api_matches_serial(backend):
+    rng = np.random.default_rng(5)
+    lv = (rng.standard_t(2, 5000) * 4).astype(np.int64)
+    for chunk in (64, 1000, 8192):
+        ref_chunks = encode_level_chunks(lv, 10, chunk)
+        chunks, counts = encode_level_chunks_batched(lv, 10, chunk,
+                                                     backend=backend)
+        assert chunks == ref_chunks
+        assert sum(counts) == lv.size
+        ref = decode_level_chunks(ref_chunks, lv.size, 10, chunk)
+        for lanes in (1, 3, 64):
+            got = decode_level_chunks_batched(
+                chunks, counts, 10,
+                DecodeOptions(lanes=lanes, backend=backend))
+            assert np.array_equal(got, ref)
+
+
+def test_scalar_worker_pool_matches_serial():
+    rng = np.random.default_rng(7)
+    lv = (rng.standard_t(2, 2000) * 3).astype(np.int64)
+    chunks, counts = encode_level_chunks_batched(lv, 10, 256)
+    ref = decode_level_chunks_batched(chunks, counts, 10,
+                                      DecodeOptions(backend="scalar"))
+    pooled = decode_level_chunks_batched(
+        chunks, counts, 10,
+        DecodeOptions(backend="scalar", workers=2, pool="thread"))
+    assert np.array_equal(pooled, ref)
+    assert np.array_equal(ref, lv)
+
+
+def test_encode_lanes_rejects_overflowing_levels():
+    with pytest.raises(OverflowError):
+        V.encode_lanes([np.array([1 << 62], dtype=np.int64)])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_decode_lanes_refuses_overflowing_streams(backend):
+    # the arbitrary-precision scalar coder legally writes levels the lane
+    # engines cannot represent; lane decode must refuse, never wrap int64
+    wide = np.array([0, 3, 1 << 62, -5], dtype=np.int64)
+    payloads = _scalar_payloads([wide], 10)
+    with pytest.raises(OverflowError):
+        V.decode_lanes(payloads, [wide.size], 10, backend=backend)
+
+
+def test_batched_decode_falls_back_to_scalar_on_wide_v1_records():
+    # regression: a v1 blob with beyond-lane-range levels must decode
+    # exactly through every batched entry point (scalar fallback), incl.
+    # the CheckpointManager.restore path (decompress(batched=True))
+    from repro.core.codec import (QuantizedTensor, decode_state_dict_batched,
+                                  encode_state_dict)
+    wide = np.array([1 << 62, 0, -(1 << 62), 7, -1], dtype=np.int64)
+    blob = encode_state_dict({"t": QuantizedTensor(wide, 1.0)}, chunk_size=2)
+    for workers in (0, 2):
+        out = decode_state_dict_batched(
+            blob, dequantize=False,
+            opts=DecodeOptions(workers=workers))["t"]
+        assert np.array_equal(out.levels, wide)
+
+
+def test_default_lanes_rereads_environment(monkeypatch):
+    monkeypatch.setenv("REPRO_CABAC_LANES", "512")
+    assert DecodeOptions().lanes == 512
+    monkeypatch.delenv("REPRO_CABAC_LANES")
+    assert DecodeOptions().lanes == 64
+
+
+def test_backend_resolution():
+    assert V.resolve_backend("auto") in ("c", "numpy")
+    assert V.resolve_backend("numpy") == "numpy"
+    with pytest.raises(ValueError):
+        V.resolve_backend("fpga")

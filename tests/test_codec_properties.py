@@ -1,0 +1,168 @@
+"""Hypothesis property suite for the codec layer.
+
+Round-trips ``encode_state_dict``/``iter_decode_state_dict`` (and the v3
+lane-scheduled records) over random dtypes (incl. bfloat16), degenerate
+shapes (empty, scalar, 1-element, non-multiple-of-chunk), adversarial
+level distributions (all-zero, single spike, max-magnitude) and chunk
+sizes.  Deterministic edge-case pins live at the bottom so the module
+keeps guarding the format when hypothesis isn't installed (the
+``_hypothesis_compat`` shim skips only the ``@given`` tests).
+"""
+
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import cabac_vec
+from repro.core.codec import (DecodeOptions, QuantizedTensor,
+                              decode_state_dict, decode_state_dict_batched,
+                              encode_level_chunks,
+                              encode_level_chunks_batched, encode_state_dict,
+                              resolve_dtype)
+from repro.core.container import ContainerWriter
+
+SHAPES = [(), (0,), (1,), (5,), (37,), (130,), (3, 4), (2, 3, 4), (16, 17)]
+DTYPES = ["float32", "float64", "float16", "bfloat16"]
+PROFILES = ["random", "zeros", "spike", "max"]
+CHUNKS = [1, 3, 16, 100, 1 << 16]
+# widest magnitude the lane engines accept (scalar goes to int64 extremes,
+# pinned deterministically below)
+WIDE = 1 << 40
+
+
+def _levels(shape, profile, seed):
+    n = int(np.prod(shape)) if shape else 1
+    rng = np.random.default_rng(seed)
+    if profile == "zeros":
+        flat = np.zeros(n, dtype=np.int64)
+    elif profile == "spike":
+        flat = np.zeros(n, dtype=np.int64)
+        if n:
+            flat[n // 2] = -WIDE
+    elif profile == "max":
+        flat = np.where(np.arange(n) % 2 == 0, WIDE, -WIDE).astype(np.int64)
+    else:
+        flat = (rng.standard_t(2, n) * 5).astype(np.int64)
+    return flat.reshape(shape)
+
+
+def _v3_blob(qt: QuantizedTensor, num_gr: int, chunk: int) -> bytes:
+    chunks, counts = encode_level_chunks_batched(qt.levels, num_gr, chunk)
+    w = ContainerWriter()
+    w.add_cabac_v3("t", qt.dtype, qt.shape, qt.step, num_gr, chunk,
+                   chunks, counts)
+    return w.tobytes()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       dtype=st.sampled_from(DTYPES),
+       shape=st.sampled_from(SHAPES),
+       profile=st.sampled_from(PROFILES),
+       chunk=st.sampled_from(CHUNKS),
+       num_gr=st.sampled_from([1, 10]),
+       container=st.sampled_from(["v1", "v3"]))
+def test_roundtrip_any_record(seed, dtype, shape, profile, chunk, num_gr,
+                              container):
+    levels = _levels(shape, profile, seed)
+    step = float(np.random.default_rng(seed).random() + 1e-3)
+    qt = QuantizedTensor(levels, step, dtype)
+    if container == "v1":
+        blob = encode_state_dict({"t": qt}, num_gr=num_gr, chunk_size=chunk)
+    else:
+        blob = _v3_blob(qt, num_gr, chunk)
+    out = decode_state_dict(blob, dequantize=False)["t"]
+    assert np.array_equal(out.levels, levels)
+    assert out.step == step and out.dtype == dtype
+    deq = decode_state_dict(blob, dequantize=True)["t"]
+    assert deq.dtype == resolve_dtype(dtype)
+    assert deq.shape == levels.shape
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       shape=st.sampled_from(SHAPES),
+       profile=st.sampled_from(PROFILES),
+       chunk=st.sampled_from(CHUNKS),
+       lanes=st.sampled_from([1, 2, 64]))
+def test_v3_batched_paths_agree(seed, shape, profile, chunk, lanes):
+    # stream / whole-container batch / scalar residual must be identical
+    levels = _levels(shape, profile, seed)
+    blob = _v3_blob(QuantizedTensor(levels, 0.5, "float32"), 10, chunk)
+    stream = decode_state_dict(
+        blob, dequantize=False, opts=DecodeOptions(lanes=lanes))["t"]
+    batched = decode_state_dict_batched(
+        blob, dequantize=False, opts=DecodeOptions(lanes=lanes))["t"]
+    scalar = decode_state_dict(
+        blob, dequantize=False, opts=DecodeOptions(backend="scalar"))["t"]
+    assert np.array_equal(stream.levels, levels)
+    assert np.array_equal(batched.levels, levels)
+    assert np.array_equal(scalar.levels, levels)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       chunk=st.sampled_from(CHUNKS),
+       num_gr=st.sampled_from([1, 10]),
+       backend=st.sampled_from(["numpy", "auto"]))
+def test_batched_encode_byte_equal_to_serial(seed, chunk, num_gr, backend):
+    levels = (np.random.default_rng(seed).standard_t(2, 333) * 9).astype(
+        np.int64)
+    assert (encode_level_chunks_batched(levels, num_gr, chunk,
+                                        backend=backend)[0]
+            == encode_level_chunks(levels, num_gr, chunk))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mixed_state_dict_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(1, 9, size=rng.integers(1, 4)))
+    entries = {
+        "q": QuantizedTensor((rng.standard_t(2, shape) * 4).astype(np.int64),
+                             0.25, "bfloat16"),
+        "raw_f32": rng.standard_normal(shape).astype(np.float32),
+        "raw_i32": rng.integers(-5, 5, shape).astype(np.int32),
+    }
+    out = decode_state_dict(encode_state_dict(entries), dequantize=False)
+    assert np.array_equal(out["q"].levels, entries["q"].levels)
+    assert np.array_equal(out["raw_f32"], entries["raw_f32"])
+    assert np.array_equal(out["raw_i32"], entries["raw_i32"])
+
+
+# -- deterministic pins (run with or without hypothesis) ---------------------
+
+def test_scalar_path_survives_int64_extremes():
+    lv = np.array([np.iinfo(np.int64).max, 0, np.iinfo(np.int64).min + 1],
+                  dtype=np.int64)
+    chunks = encode_level_chunks(lv, 10, 8)
+    got = decode_state_dict(
+        encode_state_dict({"t": QuantizedTensor(lv, 1.0)}),
+        dequantize=False,
+        opts=DecodeOptions(backend="scalar"))["t"]
+    assert np.array_equal(got.levels, lv)
+    assert len(chunks) == 1
+
+
+def test_empty_and_scalar_shapes_roundtrip_v3():
+    for shape in [(), (0,), (1,)]:
+        levels = np.zeros(shape, dtype=np.int64)
+        blob = _v3_blob(QuantizedTensor(levels, 0.5, "float32"), 10, 16)
+        out = decode_state_dict_batched(blob, dequantize=False)["t"]
+        assert out.levels.shape == shape
+        assert np.array_equal(out.levels, levels)
+
+
+def test_wide_levels_exceeding_lane_limit_use_scalar_coder():
+    lv = np.array([1 << 62], dtype=np.int64)
+    try:
+        cabac_vec.encode_lanes([lv])
+        raised = False
+    except OverflowError:
+        raised = True
+    assert raised
+    # ... while the scalar coder of the v1/v2 path still round-trips them
+    out = decode_state_dict(
+        encode_state_dict({"t": QuantizedTensor(lv, 1.0)}),
+        dequantize=False, opts=DecodeOptions(backend="scalar"))["t"]
+    assert np.array_equal(out.levels, lv)

@@ -1,0 +1,93 @@
+"""Golden-bitstream pins for the DCBC wire format (v1 / v2 / v3).
+
+Encoding must stay byte-exact against the committed fixtures and every
+fixture must decode to exactly the values its generator quantized — any
+drift in the range coder, binarization, or container layout fails here
+before it can corrupt checkpoints in the wild.
+"""
+
+import importlib.util
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.codec import (DecodeOptions, decode_state_dict,
+                              decode_state_dict_batched, resolve_dtype)
+from repro.core.container import (VERSION, VERSION_V2, VERSION_V3,
+                                  ContainerReader)
+
+_spec = importlib.util.spec_from_file_location(
+    "gen_goldens",
+    os.path.join(os.path.dirname(__file__), "golden", "gen_goldens.py"))
+gg = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(gg)
+
+
+@pytest.mark.parametrize("name", sorted(gg.BUILDERS))
+def test_encode_is_byte_exact(name):
+    assert gg.BUILDERS[name]() == gg.load_fixture(name), (
+        f"{name}: encoder output drifted from the golden fixture; if the "
+        f"format change is intentional, bump the container version and "
+        f"regenerate via tests/golden/gen_goldens.py")
+
+
+def test_golden_versions():
+    assert ContainerReader(gg.load_fixture("v1_basic")).version == VERSION
+    assert ContainerReader(gg.load_fixture("v2_mixed")).version == VERSION_V2
+    assert ContainerReader(gg.load_fixture("v3_lanes")).version == VERSION_V3
+
+
+def test_v1_golden_decodes_exactly():
+    out = decode_state_dict(gg.load_fixture("v1_basic"), dequantize=False)
+    ref = gg.v1_entries()
+    assert np.array_equal(out["w"].levels, ref["w"].levels)
+    assert out["w"].step == ref["w"].step
+    assert out["w_bf16"].dtype == "bfloat16"
+    assert np.array_equal(out["w_bf16"].levels, ref["w_bf16"].levels)
+    assert np.array_equal(out["bias"], ref["bias"])
+
+
+def test_v2_golden_decodes_exactly():
+    out = decode_state_dict(gg.load_fixture("v2_mixed"), dequantize=False)
+    huff_levels, q8_levels, q8_scale, cabac_levels = gg.v2_parts()
+    assert np.array_equal(out["huf"].levels.ravel(), huff_levels)
+    assert out["huf"].step == 0.25
+    assert np.array_equal(out["q8"].levels, q8_levels)
+    assert np.array_equal(out["q8"].scale, q8_scale)
+    assert np.array_equal(out["cab"].levels, cabac_levels)
+
+
+@pytest.mark.parametrize("path", ["stream", "batched", "scalar"])
+def test_v3_golden_decodes_exactly_on_every_path(path):
+    blob = gg.load_fixture("v3_lanes")
+    big, small = gg.v3_parts()
+    if path == "stream":
+        out = decode_state_dict(blob, dequantize=False)
+    elif path == "batched":
+        out = decode_state_dict_batched(blob, dequantize=False)
+    else:
+        out = decode_state_dict(blob, dequantize=False,
+                                opts=DecodeOptions(backend="scalar"))
+    assert np.array_equal(out["big"].levels.ravel(), big)
+    assert out["big"].step == 0.125
+    assert np.array_equal(out["small"].levels, small)
+    assert out["small"].dtype == "bfloat16"
+    assert out["raw"].dtype == resolve_dtype("float32")
+    assert np.array_equal(out["raw"].ravel(),
+                          np.arange(6, dtype=np.float32) / 8)
+
+
+def test_v3_reader_reads_v1_and_v2_unchanged():
+    # the v3-capable reader is the only reader; pinning that it yields
+    # identical results on v1/v2 fixtures is the forward-compat half of
+    # the matrix (the backward half lives in test_container_compat.py)
+    for name in ("v1_basic", "v2_mixed"):
+        blob = gg.load_fixture(name)
+        a = decode_state_dict(blob, dequantize=False)
+        b = decode_state_dict_batched(blob, dequantize=False)
+        assert sorted(a) == sorted(b)
+        for k in a:
+            la = getattr(a[k], "levels", a[k])
+            lb = getattr(b[k], "levels", b[k])
+            assert np.array_equal(la, lb), k

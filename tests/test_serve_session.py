@@ -301,8 +301,8 @@ def test_container_backend_load_is_layer_bound(smoke, monkeypatch):
     pulled = []
     real_iter = backends.iter_decompress
 
-    def spy(data, dequantize=True):
-        for item in real_iter(data, dequantize=dequantize):
+    def spy(data, dequantize=True, **kw):
+        for item in real_iter(data, dequantize=dequantize, **kw):
             pulled.append(item[0])
             yield item
     monkeypatch.setattr(backends, "iter_decompress", spy)
@@ -315,6 +315,23 @@ def test_container_backend_load_is_layer_bound(smoke, monkeypatch):
     assert peak < total / 2, (peak, total)       # never the full fp32 tree
     assert peak < 3 * largest, (peak, largest)   # layer-bound transient
     assert tree["embed"].shape == (4096, 256)
+
+
+def test_container_backend_cold_start_from_v3_blob(smoke):
+    """Serving cold start from a lane-scheduled (container v3) deployment
+    artifact: the streaming load routes every tensor's chunks through the
+    batched lane decoder and must yield the same tree as decoding the
+    equivalent v2 blob serially."""
+    from repro.core.container import VERSION_V3, ContainerReader
+    cfg, params = smoke
+    v3 = compression.get("deepcabac-v3", delta_rel=1e-3).compress(params)
+    v2 = compression.get("deepcabac-v2", delta_rel=1e-3).compress(params)
+    assert ContainerReader(v3.blob).version == VERSION_V3
+    t3 = get_backend("container").load(cfg, v3.blob)
+    t2 = get_backend("container").load(cfg, v2.blob)
+    for l3, l2 in zip(jax.tree.leaves(t3), jax.tree.leaves(t2)):
+        assert l3.dtype == l2.dtype
+        assert jnp.array_equal(l3, l2)
 
 
 # -- KV-cache delta (satellite: configurable, calibrated) ---------------------
