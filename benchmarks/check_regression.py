@@ -1,0 +1,151 @@
+"""CI benchmark-regression gate.
+
+Compares freshly produced ``BENCH_*.json`` trajectories against the
+committed baselines and fails the job when any smoke metric regresses by
+more than ``--max-slowdown`` (default 30%).  Smoke metrics are the
+headline throughput/latency numbers of each bench:
+
+* ``BENCH_serve.json``       — per-backend ``total_tok_s``   (higher better)
+* ``BENCH_cold_start.json``  — lane-engine ``values_per_s``  (higher better;
+  the serial-scalar honesty rows are skipped — they are the baseline being
+  beaten, not a product path)
+* ``BENCH_shard_restore.json`` — per-path ``restore_s`` (lower better) and
+  ``decoded_values_ratio`` (lower better; also re-asserts the sub-mesh
+  row decodes strictly fewer values than the monolithic path)
+
+Escape hatch: a commit whose message contains ``[bench-skip]`` passes the
+gate with a notice (pass the message via ``--commit-message`` — CI hands
+it ``git log -1 --pretty=%B``).  Metrics present only on one side (new
+bench, renamed row) are reported and skipped, so adding a bench never
+blocks the PR that introduces it.
+
+Run:
+    python benchmarks/check_regression.py \
+        --baseline-dir /tmp/bench-baseline --fresh-dir . \
+        --commit-message "$(git log -1 --pretty=%B)"
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BENCH_FILES = ("BENCH_serve.json", "BENCH_cold_start.json",
+               "BENCH_shard_restore.json")
+
+
+def _load(path: str) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def smoke_metrics(fname: str, report: dict) -> dict[str, tuple[float, bool]]:
+    """name -> (value, higher_is_better) for one bench report."""
+    out: dict[str, tuple[float, bool]] = {}
+    rows = report.get("rows", [])
+    if fname == "BENCH_serve.json":
+        for r in rows:
+            out[f"serve/{r['backend']}/total_tok_s"] = (
+                float(r["total_tok_s"]), True)
+    elif fname == "BENCH_cold_start.json":
+        for r in rows:
+            if r["engine"].startswith("scalar"):
+                continue
+            out[f"cold_start/{r['engine']}@{r['lanes']}/values_per_s"] = (
+                float(r["values_per_s"]), True)
+    elif fname == "BENCH_shard_restore.json":
+        for r in rows:
+            out[f"shard_restore/{r['path']}/restore_s"] = (
+                float(r["restore_s"]), False)
+            out[f"shard_restore/{r['path']}/decoded_values_ratio"] = (
+                float(r["decoded_values_ratio"]), False)
+    return out
+
+
+def check_invariants(fname: str, report: dict) -> list[str]:
+    """Hard correctness-adjacent invariants of the fresh run (no baseline
+    needed)."""
+    errors = []
+    if fname == "BENCH_shard_restore.json":
+        sub = [r for r in report.get("rows", [])
+               if r["path"].startswith("manifest_submesh")]
+        for r in sub:
+            if r["decoded_values_ratio"] >= 1.0:
+                errors.append(
+                    f"{r['path']}: sub-mesh restore decoded "
+                    f"{r['decoded_values']} values — not strictly fewer "
+                    f"than the monolithic path")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory holding the freshly produced ones")
+    ap.add_argument("--max-slowdown", type=float, default=0.30,
+                    help="fail on > this fractional regression (0.30 = 30%%)")
+    ap.add_argument("--commit-message", default="",
+                    help="HEAD commit message; '[bench-skip]' skips the gate")
+    args = ap.parse_args()
+
+    if "[bench-skip]" in args.commit_message:
+        print("benchmark-regression gate SKIPPED ([bench-skip] in commit "
+              "message)")
+        return 0
+
+    failures: list[str] = []
+    notes: list[str] = []
+    for fname in BENCH_FILES:
+        fresh = _load(os.path.join(args.fresh_dir, fname))
+        base = _load(os.path.join(args.baseline_dir, fname))
+        if fresh is None:
+            notes.append(f"{fname}: no fresh run — skipped")
+            continue
+        failures += check_invariants(fname, fresh)
+        if base is None:
+            notes.append(f"{fname}: no committed baseline — skipped "
+                         f"(first run of this bench)")
+            continue
+        fm = smoke_metrics(fname, fresh)
+        bm = smoke_metrics(fname, base)
+        for name in sorted(bm):
+            if name not in fm:
+                notes.append(f"{name}: dropped from fresh run — skipped")
+                continue
+            (fv, higher), (bv, _) = fm[name], bm[name]
+            if bv <= 0:
+                continue
+            change = (fv - bv) / bv if higher else (bv - fv) / bv
+            # change < 0 means "worse" in both orientations
+            status = "OK " if change >= -args.max_slowdown else "FAIL"
+            print(f"{status} {name}: baseline {bv:g} -> fresh {fv:g} "
+                  f"({change * 100:+.1f}%)")
+            if change < -args.max_slowdown:
+                failures.append(
+                    f"{name} regressed {-change * 100:.1f}% "
+                    f"(baseline {bv:g}, fresh {fv:g}; limit "
+                    f"{args.max_slowdown * 100:.0f}%)")
+        for name in sorted(set(fm) - set(bm)):
+            notes.append(f"{name}: new metric (no baseline) — tracked from "
+                         f"next commit")
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        print("\nbenchmark-regression gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        print("(rerun locally, or add [bench-skip] to the commit message "
+              "for a known/intentional slowdown)", file=sys.stderr)
+        return 1
+    print("benchmark-regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,163 @@
+"""Sharded-checkpoint restore benchmark: manifest-driven vs monolithic.
+
+Saves the smoke-model state both ways with the same ``deepcabac-v3``
+codec, then measures
+
+* monolithic restore (whole-container lane-batched decode — the
+  pre-sharding cold-start path),
+* manifest-driven full restore on a 1-device target (must decode the
+  same value count and reproduce the monolithic params bit-for-bit),
+* manifest-driven *sub-mesh* restore (one host of an N-way target mesh):
+  the decoded-value counter must come in strictly below the monolithic
+  path — the random-access payoff of per-shard containers + byte-range
+  record reads.
+
+Writes ``BENCH_shard_restore.json`` so CI accumulates a trajectory
+(same contract as BENCH_serve / BENCH_cold_start); the benchmark-
+regression gate (benchmarks/check_regression.py) compares it against the
+committed baseline.
+
+Run: PYTHONPATH=src python -m benchmarks.shard_restore_bench [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+
+def _state_dict(copies: int):
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import init_params
+
+    cfg = get_smoke_config("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    if copies == 1:
+        return cfg, params
+    return cfg, {f"rep{i}": params for i in range(copies)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="BENCH_shard_restore.json")
+    ap.add_argument("--copies", type=int, default=None)
+    ap.add_argument("--save-shards", type=int, default=4,
+                    help="data-axis size of the save mesh")
+    ap.add_argument("--sub-mesh", type=int, default=2,
+                    help="data-axis size of the sub-mesh restore target")
+    args = ap.parse_args()
+
+    from repro import compression
+    from repro.checkpoint import sharded
+
+    copies = args.copies or (1 if args.fast else 4)
+    chunk_size = 2048 if args.fast else 4096
+    cfg, tree = _state_dict(copies)
+    codec = compression.get("deepcabac-v3", delta_rel=1e-3,
+                            chunk_size=chunk_size)
+    reps = 1 if args.fast else 2
+
+    # -- monolithic baseline -------------------------------------------------
+    blob = codec.compress(tree).blob
+    mono_best, mono = float("inf"), None
+    for _ in range(reps):
+        t0 = time.time()
+        mono = compression.decompress(blob, batched=True)
+        mono_best = min(mono_best, time.time() - t0)
+
+    with tempfile.TemporaryDirectory() as td:
+        # -- sharded save ----------------------------------------------------
+        entries = codec.quantize_entries(tree)
+        mesh = sharded.MeshSpec(("data", "model"), (args.save_shards, 1))
+        t0 = time.time()
+        payloads, manifest = sharded.write_sharded(
+            entries, mesh, codec_name=codec.name, chunk_size=chunk_size,
+            workers=4)
+        save_s = time.time() - t0
+        for fname, data in payloads.items():
+            with open(os.path.join(td, fname), "wb") as f:
+                f.write(data)
+        with open(os.path.join(td, sharded.MANIFEST_NAME), "w") as f:
+            json.dump(manifest, f)
+        total_values = sharded.manifest_total_values(manifest)
+        shard_bytes = sum(len(b) for b in payloads.values())
+
+        # -- manifest-driven full restore (1-device target) ------------------
+        full_best = float("inf")
+        for _ in range(reps):
+            stats = sharded.RestoreStats()
+            t0 = time.time()
+            full = sharded.restore_flat(td, workers=4, stats=stats)
+            full_best = min(full_best, time.time() - t0)
+        full_stats = stats
+        mismatch = [k for k in mono
+                    if not np.array_equal(np.asarray(mono[k]),
+                                          np.asarray(full[k]))]
+        assert not mismatch, f"sharded restore diverged: {mismatch[:3]}"
+
+        # -- sub-mesh restore: one host (device 0) of an N-way target --------
+        sub_mesh = sharded.MeshSpec(("data", "model"), (args.sub_mesh, 1))
+        sub_best = float("inf")
+        for _ in range(reps):
+            stats = sharded.RestoreStats()
+            t0 = time.time()
+            sharded.restore_local_slices(td, sub_mesh, [0], workers=4,
+                                         stats=stats)
+            sub_best = min(sub_best, time.time() - t0)
+        sub_stats = stats
+        assert sub_stats.decoded_values < total_values, (
+            "sub-mesh restore must decode strictly fewer values than the "
+            f"monolithic path ({sub_stats.decoded_values} vs {total_values})")
+
+    rows = [
+        {"path": "monolithic", "restore_s": round(mono_best, 4),
+         "decoded_values": total_values, "decoded_values_ratio": 1.0,
+         "values_per_s": round(total_values / max(mono_best, 1e-9), 1)},
+        {"path": "manifest_full_1dev", "restore_s": round(full_best, 4),
+         "decoded_values": full_stats.decoded_values,
+         "decoded_values_ratio": round(
+             full_stats.decoded_values / max(total_values, 1), 4),
+         "read_bytes": full_stats.read_bytes,
+         "values_per_s": round(
+             full_stats.decoded_values / max(full_best, 1e-9), 1)},
+        {"path": f"manifest_submesh_1of{args.sub_mesh}",
+         "restore_s": round(sub_best, 4),
+         "decoded_values": sub_stats.decoded_values,
+         "decoded_values_ratio": round(
+             sub_stats.decoded_values / max(total_values, 1), 4),
+         "read_bytes": sub_stats.read_bytes,
+         "values_per_s": round(
+             sub_stats.decoded_values / max(sub_best, 1e-9), 1)},
+    ]
+    report = {
+        "bench": "shard_restore",
+        "arch": cfg.name,
+        "fast": bool(args.fast),
+        "copies": copies,
+        "chunk_size": chunk_size,
+        "save_mesh": manifest["mesh"],
+        "tensors": len(manifest["tensors"]),
+        "shard_files": len(manifest["files"]),
+        "entropy_coded_values": total_values,
+        "monolithic_mb": round(len(blob) / 2**20, 2),
+        "sharded_mb": round(shard_bytes / 2**20, 2),
+        "sharded_save_s": round(save_s, 4),
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    for r in rows:
+        print(f"shard_restore/{r['path']},{r['restore_s']},"
+              f"{json.dumps(r, default=float)}", flush=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,2 +1,6 @@
 from .manager import (CheckpointConfig, CheckpointManager,  # noqa: F401
                       flatten_tree, unflatten_like)
+from .sharded import (MANIFEST_NAME, MeshSpec, RestoreStats,  # noqa: F401
+                      assemble_slice, load_manifest, restore_flat,
+                      restore_local_slices, restore_on_mesh, verify_files,
+                      write_sharded)

@@ -14,9 +14,18 @@ Responsibilities:
 * async save: the host-side quantize+encode runs on a worker thread
   over a snapshot while the device keeps training (compute/IO overlap).
 
-In a real multi-host deployment each host writes its own shard files; here a
-single process writes full arrays — the container format (chunked CABAC
-streams) is already per-shard-parallel.  See docs/compression_api.md.
+Sharded checkpoints (``CheckpointConfig.sharded=True``): instead of one
+monolithic ``params.dcbc``, the save writes one DCBC container file per
+owning device of the save mesh — tensor shards assigned by the
+``distributed.sharding`` PartitionSpecs — plus ``params.manifest.json``
+recording global shapes, the codec, every shard's (file, byte-range,
+chunk counts) and per-file content hashes.  Restore is manifest-driven
+and *elastic*: pass a different target ``mesh`` and only the shard files
+(and v3 chunk ranges within them) covering each local device's slice are
+read and lane-decoded, then assembled into mesh-sharded ``jax.Array``\\ s
+— no full-model materialization on any host.  See
+``repro.checkpoint.sharded`` and docs/compression_api.md ("Sharded
+checkpoints").
 """
 
 from __future__ import annotations
@@ -35,6 +44,7 @@ from ..compression import decompress
 from ..compression.tree import flatten_tree, unflatten_like  # noqa: F401
 # flatten_tree/unflatten_like re-exported: they moved to compression.tree
 # but this module remains their historical import path.
+from . import sharded
 
 
 @dataclass
@@ -47,6 +57,9 @@ class CheckpointConfig:
     delta_rel: float = 1e-3        # Delta = delta_rel * std(w)
     min_quant_ndim: int = 2        # 1-D tensors stored raw (paper protocol)
     async_save: bool = False
+    sharded: bool = False          # per-shard container files + manifest
+    shard_workers: int = 0         # thread pool for per-shard encode /
+                                   # per-slice decode (0 = inline)
 
 
 class CheckpointManager:
@@ -112,8 +125,13 @@ class CheckpointManager:
                                        f"step_{s:08d}"), ignore_errors=True)
 
     def save(self, state, step: int, extra_meta: dict | None = None,
-             blocking: bool | None = None):
-        """Snapshot to host, then encode+write (optionally off-thread)."""
+             blocking: bool | None = None, mesh=None):
+        """Snapshot to host, then encode+write (optionally off-thread).
+
+        With ``cfg.sharded``, ``mesh`` (a jax Mesh, ``sharded.MeshSpec``
+        or axis-size dict) is the save mesh whose PartitionSpecs assign
+        tensor shards to per-device container files; omitting it writes a
+        single-device (one-file) sharded checkpoint."""
         snapshot = jax.device_get(state)
         blocking = (not self.cfg.async_save) if blocking is None else blocking
         codec = self._codec()
@@ -127,7 +145,27 @@ class CheckpointManager:
             bio = io.BytesIO()
             np.savez(bio, **other)
             buf["state.npz"] = bio.getvalue()
-            buf["params.dcbc"] = codec.compress(flat_p).blob
+            meta_extra = {}
+            if self.cfg.sharded:
+                kw = {}
+                coder = getattr(codec, "coder", None)
+                for attr in ("num_gr", "chunk_size"):
+                    if coder is not None and hasattr(coder, attr):
+                        kw[attr] = getattr(coder, attr)
+                payloads, manifest = sharded.write_sharded(
+                    codec.quantize_entries(flat_p), mesh,
+                    codec_name=codec.name,
+                    workers=self.cfg.shard_workers, **kw)
+                buf.update(payloads)
+                buf[sharded.MANIFEST_NAME] = json.dumps(
+                    manifest, indent=1).encode()
+                compressed = sum(len(b) for b in payloads.values())
+                meta_extra = {"sharded": True,
+                              "shard_files": len(payloads),
+                              "save_mesh": manifest["mesh"]}
+            else:
+                buf["params.dcbc"] = codec.compress(flat_p).blob
+                compressed = len(buf["params.dcbc"])
             raw_bytes = sum(v.nbytes for v in flat_p.values())
             # record only what was actually used: a config knob the chosen
             # codec ignores (delta_rel, or params_mode once codec= is set)
@@ -135,8 +173,8 @@ class CheckpointManager:
             meta = {"step": step, "codec": codec.name,
                     "codec_hyperparams": codec.hyperparams,
                     "params_raw_bytes": raw_bytes,
-                    "params_compressed_bytes": len(buf["params.dcbc"]),
-                    **(extra_meta or {})}
+                    "params_compressed_bytes": compressed,
+                    **meta_extra, **(extra_meta or {})}
             if self.cfg.codec is None:
                 meta["params_mode"] = self.cfg.params_mode
             if "delta_rel" in codec.hyperparams:
@@ -157,7 +195,7 @@ class CheckpointManager:
 
     # -- restore --------------------------------------------------------------
     def restore(self, template_state, step: int | None = None,
-                shardings=None):
+                shardings=None, mesh=None):
         """Rebuild ``template_state``'s pytree from disk.  ``shardings`` (a
         matching pytree of NamedSharding) enables elastic re-placement on a
         different mesh than the one that saved.
@@ -166,21 +204,54 @@ class CheckpointManager:
         container joins one lane-parallel decode batch
         (``repro.core.cabac_vec``) instead of the serial per-chunk loop —
         restore is a whole-model load, so model-bound decoded memory is
-        already implied."""
+        already implied.
+
+        Sharded checkpoints restore manifest-driven: with ``mesh`` (a jax
+        Mesh — any shape, not necessarily the save mesh) each parameter
+        comes back as a mesh-sharded ``jax.Array`` assembled from only the
+        shard files / chunk ranges its local slices need; without ``mesh``
+        tensors are assembled whole on the host.  ``shardings`` then only
+        re-places the non-param state."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError("no checkpoints found")
         d = os.path.join(self.cfg.directory, f"step_{step:08d}")
-        with open(os.path.join(d, "params.dcbc"), "rb") as f:
-            params = decompress(f.read(), like=template_state["params"],
-                                batched=True)
+        manifest_path = os.path.join(d, sharded.MANIFEST_NAME)
+        is_sharded = os.path.exists(manifest_path)
+        if mesh is not None and not is_sharded:
+            raise ValueError(
+                f"restore(mesh=...) needs a sharded checkpoint, but "
+                f"step {step} has no {sharded.MANIFEST_NAME} (monolithic "
+                f"save) — pass shardings= to re-place a monolithic "
+                f"restore instead")
+        if is_sharded:
+            if mesh is not None:
+                flat = sharded.restore_on_mesh(
+                    d, mesh, workers=self.cfg.shard_workers)
+            else:
+                flat = sharded.restore_flat(
+                    d, workers=self.cfg.shard_workers)
+            params = unflatten_like(flat, template_state["params"])
+        else:
+            with open(os.path.join(d, "params.dcbc"), "rb") as f:
+                params = decompress(f.read(), like=template_state["params"],
+                                    batched=True)
         with open(os.path.join(d, "state.npz"), "rb") as f:
             other = dict(np.load(f, allow_pickle=False))
         rest_t = {k: v for k, v in template_state.items() if k != "params"}
         rest = unflatten_like(other, rest_t)
         state = {"params": params, **rest}
         if shardings is not None:
-            state = jax.tree.map(jax.device_put, state, shardings)
+            if is_sharded and mesh is not None:
+                # params already live on the target mesh; re-place only
+                # the rest of the state
+                keys = [k for k in state if k != "params"]
+                moved = jax.tree.map(
+                    jax.device_put, {k: state[k] for k in keys},
+                    {k: shardings[k] for k in keys})
+                state = {**state, **moved}
+            else:
+                state = jax.tree.map(jax.device_put, state, shardings)
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)
         return state, meta

@@ -31,6 +31,14 @@ def default_lanes() -> int:
     return int(os.environ.get("REPRO_CABAC_LANES", "64"))
 
 
+def default_backend() -> str:
+    """``REPRO_CABAC_BACKEND`` pins the decode engine process-wide
+    (``c``/``numpy``/``scalar``; default ``auto``).  CI uses ``c`` to
+    *fail loudly* when the compiled lane kernel is unavailable instead of
+    silently benchmarking the numpy fallback."""
+    return os.environ.get("REPRO_CABAC_BACKEND", "auto")
+
+
 @dataclass
 class DecodeOptions:
     """How CABAC records are entropy-decoded.
@@ -47,7 +55,8 @@ class DecodeOptions:
     """
 
     lanes: int = field(default_factory=default_lanes)
-    backend: str = "auto"     # auto | c | numpy | scalar
+    backend: str = field(default_factory=default_backend)
+    # auto | c | numpy | scalar (default REPRO_CABAC_BACKEND or "auto")
     workers: int = 0          # 0 => in-line serial scalar path
     pool: str = "thread"      # thread | process
 

@@ -39,6 +39,13 @@ Chunks are independently decodable (fresh context state per chunk) so a
 multi-host restore can fan decode out across hosts/processes — or across
 SIMD lanes in one process; the rate cost of chunking is measured in
 benchmarks (<1% for 64Ki chunks).
+
+Records are also independently *addressable*: :meth:`ContainerWriter.
+record_spans` reports each record's (offset, length) in the serialized
+container, and :func:`read_record_at` parses exactly one record from a
+byte-range read — no container header, no whole-file mmap.  This is the
+random-access contract the sharded-checkpoint manifest
+(``repro.checkpoint.sharded``) builds on.
 """
 
 from __future__ import annotations
@@ -170,6 +177,95 @@ class ContainerWriter:
         head = MAGIC + struct.pack("<HI", version, len(self._records))
         return head + b"".join(self._records)
 
+    def record_spans(self) -> list[tuple[int, int]]:
+        """(byte offset, byte length) of each record in the container
+        :meth:`tobytes` serializes, in add order.  Offsets include the
+        container header, so a reader can pread one record straight out
+        of the file and hand it to :func:`read_record_at` — the
+        sharded-checkpoint manifest persists exactly these spans."""
+        spans, off = [], HEADER_LEN
+        for rec in self._records:
+            spans.append((off, len(rec)))
+            off += len(rec)
+        return spans
+
+
+def _parse_record(data, view, off: int, label: str
+                  ) -> tuple[RecordHeader, memoryview, int]:
+    """Parse one record at ``off``; returns (header, payload, next offset).
+
+    ``label`` names the record in truncation errors ("record 3 of 9" for
+    the whole-container iterator, "byte-range record" for pread paths).
+    The payload is a zero-copy memoryview slice of ``view``.
+    """
+    try:
+        (nlen,) = struct.unpack_from("<H", data, off); off += 2
+        name = bytes(data[off:off + nlen]).decode("utf-8"); off += nlen
+        (enc,) = struct.unpack_from("<B", data, off); off += 1
+        (dlen,) = struct.unpack_from("<B", data, off); off += 1
+        dtype = bytes(data[off:off + dlen]).decode("ascii"); off += dlen
+        (ndim,) = struct.unpack_from("<B", data, off); off += 1
+        shape = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        step, num_gr, chunk_size, nchunks = 0.0, 0, 0, 0
+        total = 0
+        chunk_lens: tuple[int, ...] = ()
+        chunk_counts: tuple[int, ...] = ()
+        scale_shape: tuple[int, ...] = ()
+        if enc == ENC_CABAC:
+            step, num_gr, chunk_size, nchunks = struct.unpack_from(
+                "<dBII", data, off)
+            off += 17
+            chunk_lens = struct.unpack_from(f"<{nchunks}I", data, off)
+            off += 4 * nchunks
+        elif enc == ENC_CABAC_V3:
+            step, num_gr, chunk_size, total, nchunks = \
+                struct.unpack_from("<dBIQI", data, off)
+            off += 25
+            chunk_lens = struct.unpack_from(f"<{nchunks}I", data, off)
+            off += 4 * nchunks
+            chunk_counts = struct.unpack_from(f"<{nchunks}I", data, off)
+            off += 4 * nchunks
+        elif enc == ENC_HUFF:
+            (step,) = struct.unpack_from("<d", data, off)
+            off += 8
+        elif enc == ENC_Q8:
+            (sndim,) = struct.unpack_from("<B", data, off); off += 1
+            scale_shape = struct.unpack_from(f"<{sndim}I", data, off)
+            off += 4 * sndim
+        (plen,) = struct.unpack_from("<Q", data, off); off += 8
+    except (struct.error, UnicodeDecodeError) as e:
+        # UnicodeDecodeError: a mis-aligned byte-range read lands the
+        # name/dtype fields on arbitrary bytes — same failure class as a
+        # short read, same descriptive error
+        raise ValueError(
+            f"truncated DCBC record header ({label})") from e
+    if off + plen > len(data):
+        raise ValueError(
+            f"truncated DCBC record payload: {label} ({name!r}) wants "
+            f"{plen} bytes, {len(data) - off} remain")
+    payload = view[off:off + plen]
+    hdr = RecordHeader(name, enc, dtype, tuple(shape), step, num_gr,
+                       chunk_size, chunk_lens, tuple(scale_shape),
+                       chunk_counts, total)
+    return hdr, payload, off + plen
+
+
+def read_record_at(data, offset: int = 0
+                   ) -> tuple[RecordHeader, memoryview]:
+    """Parse exactly one record from ``data`` starting at ``offset``.
+
+    ``data`` is a *byte-range read* of one record — no container header,
+    no surrounding records required — so a manifest-driven restore can
+    ``seek(offset); read(length)`` a single shard record out of a large
+    shard file instead of mapping the whole file
+    (``ContainerWriter.record_spans`` is where the spans come from).
+    Truncated inputs raise a descriptive ``ValueError`` like the
+    whole-container reader."""
+    view = memoryview(data)
+    hdr, payload, _ = _parse_record(data, view, offset, "byte-range record")
+    return hdr, payload
+
 
 class ContainerReader:
     def __init__(self, data: bytes, max_version: int = VERSION_V3):
@@ -198,53 +294,6 @@ class ContainerReader:
         view = memoryview(data)
         off = self._offset
         for rec in range(self.num_records):
-            try:
-                (nlen,) = struct.unpack_from("<H", data, off); off += 2
-                name = data[off:off + nlen].decode("utf-8"); off += nlen
-                (enc,) = struct.unpack_from("<B", data, off); off += 1
-                (dlen,) = struct.unpack_from("<B", data, off); off += 1
-                dtype = data[off:off + dlen].decode("ascii"); off += dlen
-                (ndim,) = struct.unpack_from("<B", data, off); off += 1
-                shape = struct.unpack_from(f"<{ndim}I", data, off)
-                off += 4 * ndim
-                step, num_gr, chunk_size, nchunks = 0.0, 0, 0, 0
-                total = 0
-                chunk_lens: tuple[int, ...] = ()
-                chunk_counts: tuple[int, ...] = ()
-                scale_shape: tuple[int, ...] = ()
-                if enc == ENC_CABAC:
-                    step, num_gr, chunk_size, nchunks = struct.unpack_from(
-                        "<dBII", data, off)
-                    off += 17
-                    chunk_lens = struct.unpack_from(f"<{nchunks}I", data, off)
-                    off += 4 * nchunks
-                elif enc == ENC_CABAC_V3:
-                    step, num_gr, chunk_size, total, nchunks = \
-                        struct.unpack_from("<dBIQI", data, off)
-                    off += 25
-                    chunk_lens = struct.unpack_from(f"<{nchunks}I", data, off)
-                    off += 4 * nchunks
-                    chunk_counts = struct.unpack_from(
-                        f"<{nchunks}I", data, off)
-                    off += 4 * nchunks
-                elif enc == ENC_HUFF:
-                    (step,) = struct.unpack_from("<d", data, off)
-                    off += 8
-                elif enc == ENC_Q8:
-                    (sndim,) = struct.unpack_from("<B", data, off); off += 1
-                    scale_shape = struct.unpack_from(f"<{sndim}I", data, off)
-                    off += 4 * sndim
-                (plen,) = struct.unpack_from("<Q", data, off); off += 8
-            except struct.error as e:
-                raise ValueError(
-                    f"truncated DCBC record header (record {rec} of "
-                    f"{self.num_records})") from e
-            if off + plen > len(data):
-                raise ValueError(
-                    f"truncated DCBC record payload: record {rec} "
-                    f"({name!r}) wants {plen} bytes, "
-                    f"{len(data) - off} remain")
-            payload = view[off:off + plen]; off += plen
-            yield RecordHeader(name, enc, dtype, tuple(shape), step, num_gr,
-                               chunk_size, chunk_lens, tuple(scale_shape),
-                               chunk_counts, total), payload
+            hdr, payload, off = _parse_record(
+                data, view, off, f"record {rec} of {self.num_records}")
+            yield hdr, payload

@@ -23,9 +23,19 @@ Blob loads never materialize the full fp32 tree: the template comes from
 ``jax.eval_shape`` (shapes/dtypes only) and each decoded tensor is
 converted to its destination representation before the next record is
 pulled.
+
+Backends also cold-start from a *sharded checkpoint manifest*: pass a
+path (the checkpoint step directory, or the ``params.manifest.json``
+itself) as the weight source and tensors are assembled shard-by-shard
+through ``repro.checkpoint.sharded`` — with a serving ``mesh`` set on the
+backend, only the shard files / v3 chunk ranges covering the mesh's local
+slices are read and decoded, and parameters arrive as mesh-sharded
+``jax.Array``\\ s.  See docs/compression_api.md ("Sharded checkpoints").
 """
 
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -47,12 +57,17 @@ class WeightBackend:
     backend keeps the layer-bound streaming contract *and* vectorized
     decode.  Defaults come from ``DecodeOptions()`` (env-tunable lanes /
     engine).
+
+    ``mesh`` scopes *manifest* cold starts to a serving mesh: entropy-
+    coded tensors come back as mesh-sharded ``jax.Array``\\ s assembled
+    from only the shards each local device's slice needs.
     """
 
     name = "?"
 
-    def __init__(self, decode: DecodeOptions | None = None):
+    def __init__(self, decode: DecodeOptions | None = None, mesh=None):
         self.decode = decode or DecodeOptions()
+        self.mesh = mesh
 
     def load(self, cfg, source):
         raise NotImplementedError
@@ -149,6 +164,55 @@ def _stream_tree(cfg, blob: bytes, convert,
     return tree
 
 
+def _is_manifest_source(source) -> bool:
+    return isinstance(source, (str, os.PathLike))
+
+
+def _manifest_tree(cfg, source, convert,
+                   decode: DecodeOptions | None = None, mesh=None) -> dict:
+    """Cold-start from a sharded checkpoint manifest.
+
+    Same template-validation contract as :func:`_stream_tree`, but the
+    source is a directory of per-shard DCBC files + manifest
+    (``repro.checkpoint.sharded``).  Tensors are assembled one at a time
+    (layer-bound decoded-host peak); with ``mesh``, entropy-coded tensors
+    skip ``convert`` and arrive as mesh-sharded ``jax.Array``\\ s built
+    from only the shards the mesh's local slices cover.
+    """
+    from ..checkpoint import sharded
+    directory = sharded.manifest_dir(str(source))
+    manifest = sharded.load_manifest(str(source))
+    num_gr = manifest.get("num_gr")
+    specs = _template_specs(cfg)
+    tree: dict = {}
+    seen: set = set()
+    for name, tinfo in sorted(manifest["tensors"].items()):
+        spec = specs.get(name)
+        if spec is None:
+            continue                       # not part of this model
+        if tuple(tinfo["shape"]) != tuple(spec.shape):
+            raise ValueError(
+                f"{name}: manifest shape {tuple(tinfo['shape'])} != model "
+                f"{tuple(spec.shape)}")
+        seen.add(name)
+        if mesh is not None and tinfo["encoding"] != "q8":
+            leaf = sharded.restore_tensor_on_mesh(
+                directory, name, tinfo, mesh, opts=decode, num_gr=num_gr,
+                dtype=spec.dtype)
+        else:
+            rec = sharded.assemble_slice(
+                directory, name, tinfo, opts=decode, num_gr=num_gr,
+                dequantize=False)
+            leaf = convert(name, rec, spec.dtype)
+        _insert(tree, name, leaf)
+    missing = sorted(set(specs) - seen)
+    if missing:
+        raise KeyError(
+            f"manifest missing {len(missing)} model tensor(s), e.g. "
+            f"{missing[:3]}")
+    return tree
+
+
 def _to_array(record, dtype):
     """Decoded record -> device array in the template dtype.
 
@@ -178,6 +242,10 @@ class Bf16Backend(WeightBackend):
     name = "bf16"
 
     def load(self, cfg, source):
+        if _is_manifest_source(source):
+            return _manifest_tree(cfg, source,
+                                  lambda name, rec, dt: _to_array(rec, dt),
+                                  decode=self.decode, mesh=self.mesh)
         if isinstance(source, (bytes, bytearray, memoryview)):
             return _stream_tree(cfg, bytes(source),
                                 lambda name, rec, dt: _to_array(rec, dt),
@@ -195,14 +263,19 @@ class Q8Backend(WeightBackend):
     name = "q8"
 
     def load(self, cfg, source):
+        def convert(name, rec, dt):
+            if isinstance(rec, Q8Tensor):
+                return _q8_leaf(rec)
+            arr = _to_array(rec, dt)
+            if serve_q8_policy(name, arr):
+                return quantize_leaf(arr)
+            return arr
+        if _is_manifest_source(source):
+            # host-side conversion: every decoded tensor becomes an
+            # in-memory {"q8","q8s"} leaf, so the mesh-sharded fast path
+            # doesn't apply here
+            return _manifest_tree(cfg, source, convert, decode=self.decode)
         if isinstance(source, (bytes, bytearray, memoryview)):
-            def convert(name, rec, dt):
-                if isinstance(rec, Q8Tensor):
-                    return _q8_leaf(rec)
-                arr = _to_array(rec, dt)
-                if serve_q8_policy(name, arr):
-                    return quantize_leaf(arr)
-                return arr
             return _stream_tree(cfg, bytes(source), convert,
                                 decode=self.decode)
         return quantize_tree_q8(source)
@@ -217,16 +290,19 @@ class ContainerBackend(WeightBackend):
     name = "container"
 
     def load(self, cfg, source):
-        if not isinstance(source, (bytes, bytearray, memoryview)):
-            raise TypeError(
-                "container backend loads DCBC blobs (bytes); got "
-                f"{type(source).__name__} — use the 'bf16' or 'q8' backend "
-                "for in-memory pytrees")
-
         def convert(name, rec, dt):
             if isinstance(rec, Q8Tensor):
                 return _q8_leaf(rec)
             return _to_array(rec, dt)
+        if _is_manifest_source(source):
+            return _manifest_tree(cfg, source, convert,
+                                  decode=self.decode, mesh=self.mesh)
+        if not isinstance(source, (bytes, bytearray, memoryview)):
+            raise TypeError(
+                "container backend loads DCBC blobs (bytes) or a sharded-"
+                "checkpoint manifest path; got "
+                f"{type(source).__name__} — use the 'bf16' or 'q8' backend "
+                "for in-memory pytrees")
         return _stream_tree(cfg, bytes(source), convert, decode=self.decode)
 
 

@@ -11,11 +11,18 @@ Regenerate (only after an *intentional* format change, with a matching
 version bump / compat note in docs/compression_api.md):
 
     PYTHONPATH=src python tests/golden/gen_goldens.py
+
+Drift check (CI runs this as its own step, so wire-format drift fails
+loudly and separately from the test suite):
+
+    PYTHONPATH=src python tests/golden/gen_goldens.py --check
 """
 
 from __future__ import annotations
 
+import argparse
 import os
+import sys
 
 import numpy as np
 
@@ -110,13 +117,55 @@ def load_fixture(name: str) -> bytes:
         return bytes.fromhex("".join(f.read().split()))
 
 
+def _render(blob: bytes) -> str:
+    h = blob.hex()
+    return "\n".join(h[i:i + WRAP] for i in range(0, len(h), WRAP)) + "\n"
+
+
+def check() -> int:
+    """Regenerate every fixture in memory and diff against the committed
+    hex files.  Exit 1 on any drift — the wire format changed without a
+    deliberate fixture regeneration (and version bump / compat note)."""
+    drifted = []
+    for name, build in BUILDERS.items():
+        fresh = build()
+        try:
+            committed = load_fixture(name)
+        except FileNotFoundError:
+            drifted.append(f"{name}: fixture file missing")
+            continue
+        if fresh == committed:
+            print(f"{name}: OK ({len(fresh)} bytes, byte-identical)")
+            continue
+        first = next((i for i, (a, b) in enumerate(zip(fresh, committed))
+                      if a != b), min(len(fresh), len(committed)))
+        drifted.append(
+            f"{name}: encoder output drifted from committed fixture "
+            f"({len(committed)} -> {len(fresh)} bytes, first difference "
+            f"at byte {first})")
+    for msg in drifted:
+        print(f"DRIFT {msg}", file=sys.stderr)
+    if drifted:
+        print("wire-format drift detected: if intentional, regenerate "
+              "fixtures with gen_goldens.py and document the change in "
+              "docs/compression_api.md", file=sys.stderr)
+        return 1
+    print("golden fixtures clean: no wire-format drift")
+    return 0
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="diff regenerated fixtures against tests/golden/ "
+                         "instead of overwriting them")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check())
     for name, build in BUILDERS.items():
         blob = build()
-        h = blob.hex()
-        lines = [h[i:i + WRAP] for i in range(0, len(h), WRAP)]
         with open(fixture_path(name), "w") as f:
-            f.write("\n".join(lines) + "\n")
+            f.write(_render(blob))
         print(f"{name}: {len(blob)} bytes -> {fixture_path(name)}")
 
 

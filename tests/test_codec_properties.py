@@ -9,6 +9,8 @@ keeps guarding the format when hypothesis isn't installed (the
 ``_hypothesis_compat`` shim skips only the ``@given`` tests).
 """
 
+import os
+
 import numpy as np
 
 from _hypothesis_compat import given, settings, st
@@ -28,6 +30,13 @@ CHUNKS = [1, 3, 16, 100, 1 << 16]
 # widest magnitude the lane engines accept (scalar goes to int64 extremes,
 # pinned deterministically below)
 WIDE = 1 << 40
+
+
+def _ex(n: int) -> int:
+    """Example budget: scaled by ``REPRO_HYPOTHESIS_X`` (the nightly CI
+    job sets 8, with ``--hypothesis-seed=random``) so the scheduled fuzz
+    digs an order of magnitude deeper than the per-push smoke."""
+    return n * int(os.environ.get("REPRO_HYPOTHESIS_X", "1"))
 
 
 def _levels(shape, profile, seed):
@@ -54,7 +63,7 @@ def _v3_blob(qt: QuantizedTensor, num_gr: int, chunk: int) -> bytes:
     return w.tobytes()
 
 
-@settings(max_examples=30, deadline=None)
+@settings(max_examples=_ex(30), deadline=None)
 @given(seed=st.integers(0, 2**31 - 1),
        dtype=st.sampled_from(DTYPES),
        shape=st.sampled_from(SHAPES),
@@ -79,7 +88,7 @@ def test_roundtrip_any_record(seed, dtype, shape, profile, chunk, num_gr,
     assert deq.shape == levels.shape
 
 
-@settings(max_examples=20, deadline=None)
+@settings(max_examples=_ex(20), deadline=None)
 @given(seed=st.integers(0, 2**31 - 1),
        shape=st.sampled_from(SHAPES),
        profile=st.sampled_from(PROFILES),
@@ -100,7 +109,7 @@ def test_v3_batched_paths_agree(seed, shape, profile, chunk, lanes):
     assert np.array_equal(scalar.levels, levels)
 
 
-@settings(max_examples=20, deadline=None)
+@settings(max_examples=_ex(20), deadline=None)
 @given(seed=st.integers(0, 2**31 - 1),
        chunk=st.sampled_from(CHUNKS),
        num_gr=st.sampled_from([1, 10]),
@@ -113,7 +122,7 @@ def test_batched_encode_byte_equal_to_serial(seed, chunk, num_gr, backend):
             == encode_level_chunks(levels, num_gr, chunk))
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=_ex(15), deadline=None)
 @given(seed=st.integers(0, 2**31 - 1))
 def test_mixed_state_dict_roundtrip(seed):
     rng = np.random.default_rng(seed)

@@ -19,7 +19,7 @@ from repro.core.codec import (QuantizedTensor, decode_state_dict,
                               encode_level_chunks_batched, encode_state_dict)
 from repro.core.container import (HEADER_LEN, MAGIC, VERSION, VERSION_V2,
                                   VERSION_V3, ContainerReader,
-                                  ContainerWriter)
+                                  ContainerWriter, read_record_at)
 
 
 def _v1_blob() -> bytes:
@@ -114,3 +114,56 @@ def test_reader_rejects_truncated_record_header():
     # cut inside the lane-metadata tables, before the payload length field
     with pytest.raises(ValueError, match="truncated DCBC record"):
         list(ContainerReader(blob[:HEADER_LEN + 20]))
+
+
+# -- byte-range record reads (sharded-checkpoint manifest path) --------------
+
+def _mixed_writer() -> ContainerWriter:
+    w = ContainerWriter()
+    lv = (np.arange(90, dtype=np.int64) % 11) - 5
+    chunks, counts = encode_level_chunks_batched(lv, 10, 32)
+    w.add_cabac_v3("w", "float32", (90,), 0.25, 10, 32, chunks, counts)
+    w.add_raw("bias", np.arange(6, dtype=np.float32))
+    w.add_q8("q", "float32", np.arange(-6, 6, dtype=np.int8).reshape(3, 4),
+             np.ones(4, dtype=np.float32))
+    return w
+
+
+def test_record_spans_pread_every_record():
+    """Each (offset, length) span must parse standalone via read_record_at
+    and agree with the whole-container iterator — the contract the
+    sharded manifest relies on to avoid mapping whole shard files."""
+    w = _mixed_writer()
+    blob = w.tobytes()
+    spans = w.record_spans()
+    assert len(spans) == 3
+    assert spans[0][0] == HEADER_LEN
+    assert spans[-1][0] + spans[-1][1] == len(blob)
+    for (hdr_it, payload_it), (off, length) in zip(ContainerReader(blob),
+                                                   spans):
+        hdr, payload = read_record_at(blob[off:off + length])
+        assert hdr == hdr_it
+        assert bytes(payload) == bytes(payload_it)
+
+
+def test_read_record_at_nonzero_offset():
+    w = _mixed_writer()
+    blob = w.tobytes()
+    off, length = w.record_spans()[1]
+    hdr, _ = read_record_at(b"\xaa" * 7 + blob[off:off + length], offset=7)
+    assert hdr.name == "bias"
+
+
+def test_read_record_at_rejects_truncated_shard_reads():
+    """A shard file cut mid-record must fail loudly on the byte-range
+    path, in both the header and the payload region."""
+    w = _mixed_writer()
+    blob = w.tobytes()
+    off, length = w.record_spans()[0]
+    rec = blob[off:off + length]
+    with pytest.raises(ValueError, match="truncated DCBC record header"):
+        read_record_at(rec[:10])
+    with pytest.raises(ValueError, match="truncated DCBC record payload"):
+        read_record_at(rec[:-3])
+    with pytest.raises(ValueError, match="truncated DCBC record"):
+        read_record_at(rec, offset=5)      # misaligned start
