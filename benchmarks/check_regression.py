@@ -12,6 +12,11 @@ headline throughput/latency numbers of each bench:
 * ``BENCH_shard_restore.json`` — per-path ``restore_s`` (lower better) and
   ``decoded_values_ratio`` (lower better; also re-asserts the sub-mesh
   row decodes strictly fewer values than the monolithic path)
+* ``BENCH_delta.json``         — P-frame ``ratio_vs_full`` and
+  ``tc_vs_intra`` (both lower better; hard invariants pin the delta at
+  <= 0.35x the full re-encode and temporal-context CABAC strictly below
+  intra coding of the same residuals) and live-swap ``swap_s``
+  (lower better)
 
 Escape hatch: a commit whose message contains ``[bench-skip]`` passes the
 gate with a notice (pass the message via ``--commit-message`` — CI hands
@@ -33,7 +38,7 @@ import os
 import sys
 
 BENCH_FILES = ("BENCH_serve.json", "BENCH_cold_start.json",
-               "BENCH_shard_restore.json")
+               "BENCH_shard_restore.json", "BENCH_delta.json")
 
 
 def _load(path: str) -> dict | None:
@@ -63,6 +68,15 @@ def smoke_metrics(fname: str, report: dict) -> dict[str, tuple[float, bool]]:
                 float(r["restore_s"]), False)
             out[f"shard_restore/{r['path']}/decoded_values_ratio"] = (
                 float(r["decoded_values_ratio"]), False)
+    elif fname == "BENCH_delta.json":
+        for r in rows:
+            if r["path"] == "p_frame":
+                out["delta/p_frame/ratio_vs_full"] = (
+                    float(r["ratio_vs_full"]), False)
+                out["delta/p_frame/tc_vs_intra"] = (
+                    float(r["tc_vs_intra"]), False)
+            elif r["path"] == "swap":
+                out["delta/swap/swap_s"] = (float(r["swap_s"]), False)
     return out
 
 
@@ -79,6 +93,20 @@ def check_invariants(fname: str, report: dict) -> list[str]:
                     f"{r['path']}: sub-mesh restore decoded "
                     f"{r['decoded_values']} values — not strictly fewer "
                     f"than the monolithic path")
+    elif fname == "BENCH_delta.json":
+        for r in report.get("rows", []):
+            if r["path"] != "p_frame":
+                continue
+            if r["ratio_vs_full"] > 0.35:
+                errors.append(
+                    f"p_frame: delta is {r['ratio_vs_full']:.3f}x the full "
+                    f"re-encode — residual coding must stay <= 0.35x for "
+                    f"small perturbations")
+            if r["tc_vs_intra"] >= 1.0:
+                errors.append(
+                    f"p_frame: temporal-context CABAC ({r['tc_bytes']} B) "
+                    f"did not beat intra coding of the same residuals "
+                    f"({r['intra_bytes']} B)")
     return errors
 
 

@@ -1,0 +1,180 @@
+"""Temporal-delta ("P-frame") checkpoint benchmark.
+
+Encodes the smoke model twice — a pruned base frame and a realistically
+drifted next frame (small multiplicative drift plus sub-step noise on
+the surviving weights, zeros preserved) — and measures
+
+* P-frame bytes vs a full I-frame re-encode of the same step-locked
+  frame (the storage payoff of residual coding; the gate requires
+  <= 0.35x),
+* temporal-context CABAC vs intra-only coding of the *same* residuals
+  (the payoff of conditioning context banks on the co-located base
+  level; must come in strictly below 1.0),
+* live ``ServeSession.swap_weights`` latency vs a cold serving start
+  from the full container (the serving payoff: only residual decode +
+  in-place patch, no session rebuild).
+
+Writes ``BENCH_delta.json`` (same trajectory contract as the other
+benches); benchmarks/check_regression.py gates the ratios and the swap
+latency against the committed baseline.
+
+Run: PYTHONPATH=src python -m benchmarks.delta_bench [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+
+def _params(prune: float, seed: int = 0):
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import init_params
+
+    cfg = get_smoke_config("llama3-8b")
+    params = jax.device_get(init_params(cfg, jax.random.PRNGKey(seed)))
+    from repro.compression import flatten_tree
+    rng = np.random.default_rng(seed)
+    flat = {}
+    for k, v in flatten_tree(params).items():
+        v = np.asarray(v)
+        if v.dtype.kind == "f" and v.ndim >= 2:
+            # magnitude pruning stands in for the sparse networks the
+            # paper compresses; the drift model below keeps zeros zero
+            mask = rng.random(v.shape) >= prune
+            v = (v * mask).astype(v.dtype)
+        flat[k] = v
+    return cfg, flat
+
+
+def _drift(flat: dict, steps: dict, seed: int) -> dict:
+    """One optimizer step of drift: ~1e-4 relative change plus sub-step
+    noise on nonzero weights (residuals land mostly in {-1, 0, 1} on the
+    base grid), pruned zeros stay exactly zero."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, v in flat.items():
+        v = np.asarray(v)
+        if v.dtype.kind == "f" and k in steps:
+            noise = (v * 1e-4 * rng.standard_normal(v.shape)
+                     + steps[k] * 0.3 * rng.standard_normal(v.shape)
+                     * (v != 0))
+            out[k] = (v + noise).astype(v.dtype)
+        else:
+            out[k] = v
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="BENCH_delta.json")
+    ap.add_argument("--prune", type=float, default=0.3)
+    args = ap.parse_args()
+
+    from repro import compression
+    from repro.checkpoint import CheckpointConfig, CheckpointManager
+    from repro.core.codec import DeltaTensor, encode_level_chunks_batched
+    from repro.serve.backends import get_backend
+    from repro.serve.session import ServeConfig, ServeSession
+
+    cfg, flat = _params(args.prune)
+    codec = compression.get("deepcabac-delta", delta_rel=1e-3)
+    reps = 1 if args.fast else 3
+
+    base_art = codec.compress(flat)
+    base_entries = base_art.quantized
+    kf_bytes = len(base_art.blob)
+    steps = {k: e.step for k, e in base_entries.items()
+             if hasattr(e, "step")}
+    flat2 = _drift(flat, steps, seed=1)
+
+    # -- P-frame vs full re-encode of the same step-locked frame -----------
+    dentries = codec.delta_entries(flat2, base_entries)
+    delta_art = codec.compress_delta(flat2, base_entries)
+    delta_bytes = len(delta_art.blob)
+    full_bytes = len(codec.compress_entries(
+        codec.quantize_like(flat2, base_entries)).blob)
+
+    # -- temporal-context vs intra coding of the same residuals ------------
+    tc_bytes = intra_bytes = 0
+    coder = codec.coder
+    for e in dentries.values():
+        if not isinstance(e, DeltaTensor):
+            continue
+        from repro.core.codec import encode_delta_chunks_batched
+        tc = encode_delta_chunks_batched(e.resid.ravel(), e.base.ravel(),
+                                         coder.num_gr, coder.chunk_size)[0]
+        intra = encode_level_chunks_batched(e.resid.ravel(), coder.num_gr,
+                                            coder.chunk_size)[0]
+        tc_bytes += sum(len(p) for p in tc)
+        intra_bytes += sum(len(p) for p in intra)
+
+    # -- swap latency vs cold start -----------------------------------------
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(CheckpointConfig(
+            td, keep=4, codec="deepcabac-delta", delta_every=4))
+        mgr.save({"params": flat}, 1)
+        mgr.save({"params": flat2}, 2)
+        kf_dir = os.path.join(td, "step_00000001")
+        delta_dir = os.path.join(td, "step_00000002")
+        with open(os.path.join(kf_dir, "params.dcbc"), "rb") as f:
+            kf_blob = f.read()
+        full_blob = codec.compress_entries(
+            codec.quantize_like(flat2, base_entries)).blob
+
+        serve_cfg = ServeConfig(slots=2, max_len=32)
+        cold_best = float("inf")
+        for _ in range(reps):
+            t0 = time.time()
+            ServeSession(cfg, full_blob, backend="container",
+                         serve_cfg=serve_cfg)
+            cold_best = min(cold_best, time.time() - t0)
+
+        swap_best, swapped = float("inf"), 0
+        for _ in range(reps):
+            backend = get_backend("container", track_levels=True)
+            session = ServeSession(cfg, kf_blob, backend=backend,
+                                   serve_cfg=serve_cfg)
+            t0 = time.time()
+            swapped = session.swap_weights(delta_dir)
+            swap_best = min(swap_best, time.time() - t0)
+
+    rows = [
+        {"path": "p_frame",
+         "bytes": delta_bytes,
+         "keyframe_bytes": kf_bytes,
+         "full_bytes": full_bytes,
+         "ratio_vs_full": round(delta_bytes / max(full_bytes, 1), 4),
+         "tc_bytes": tc_bytes,
+         "intra_bytes": intra_bytes,
+         "tc_vs_intra": round(tc_bytes / max(intra_bytes, 1), 4)},
+        {"path": "swap",
+         "swap_s": round(swap_best, 4),
+         "cold_start_s": round(cold_best, 4),
+         "swapped_tensors": swapped,
+         "speedup_vs_cold": round(cold_best / max(swap_best, 1e-9), 2)},
+    ]
+    report = {
+        "bench": "delta",
+        "arch": cfg.name,
+        "fast": bool(args.fast),
+        "prune": args.prune,
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    for r in rows:
+        print(f"delta/{r['path']},{json.dumps(r, default=float)}",
+              flush=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,7 @@
+from .delta import (DELTA_FILE, DeltaBaseMissingError,  # noqa: F401
+                    DeltaChainError, base_ref, base_step_of, resolve_chain,
+                    restore_flat_delta, restore_levels, restore_on_mesh_delta,
+                    write_delta)
 from .manager import (CheckpointConfig, CheckpointManager,  # noqa: F401
                       flatten_tree, unflatten_like)
 from .sharded import (MANIFEST_NAME, MeshSpec, RestoreStats,  # noqa: F401

@@ -26,6 +26,19 @@ read and lane-decoded, then assembled into mesh-sharded ``jax.Array``\\ s
 — no full-model materialization on any host.  See
 ``repro.checkpoint.sharded`` and docs/compression_api.md ("Sharded
 checkpoints").
+
+Delta ("P-frame") checkpoints (``CheckpointConfig.delta_every=K`` with a
+delta-capable codec, e.g. ``codec="deepcabac-delta"``): every K-th save
+is a full keyframe (I-frame, honoring ``sharded``); the saves between
+are P-frames — integer-level residuals against the previous save,
+temporal-context CABAC coded into one container-v4 ``delta_00000.dcbc``
+plus a version-2 manifest whose ``"base"`` block names (and SHA-256
+pins) the base step.  Chained reconstruction is bit-identical to a
+direct encode of the same step-locked frame, and retention never GCs a
+base still referenced by a retained step's chain.  ``restore`` resolves
+chains transparently (``repro.checkpoint.delta``); see
+docs/compression_api.md ("Delta checkpoints & P-frame containers") and
+docs/serving_api.md ("Live weight swap") for the serving-side consumer.
 """
 
 from __future__ import annotations
@@ -44,6 +57,7 @@ from ..compression import decompress
 from ..compression.tree import flatten_tree, unflatten_like  # noqa: F401
 # flatten_tree/unflatten_like re-exported: they moved to compression.tree
 # but this module remains their historical import path.
+from . import delta as delta_mod
 from . import sharded
 
 
@@ -60,6 +74,10 @@ class CheckpointConfig:
     sharded: bool = False          # per-shard container files + manifest
     shard_workers: int = 0         # thread pool for per-shard encode /
                                    # per-slice decode (0 = inline)
+    delta_every: int = 0           # 0 = every save is a keyframe; K >= 1 =
+                                   # I-frame every K saves, P-frames between
+                                   # (needs a delta-capable codec, e.g.
+                                   # "deepcabac-delta")
 
 
 class CheckpointManager:
@@ -67,6 +85,11 @@ class CheckpointManager:
         self.cfg = cfg
         os.makedirs(cfg.directory, exist_ok=True)
         self._worker: threading.Thread | None = None
+        # (step, quantized entries) of the last save — the next P-frame's
+        # base without a disk round-trip; rebuilt via the chain on miss.
+        # Populated only when delta_every > 0 (it holds model-sized
+        # int64 levels).
+        self._base_cache: tuple[int, dict] | None = None
 
     # -- discovery ----------------------------------------------------------
     def steps(self) -> list[int]:
@@ -118,11 +141,68 @@ class CheckpointManager:
             raise
         self._retain()
 
+    def _chain_depth(self, step: int) -> int:
+        """P-frames above the keyframe at ``step`` (0 for a keyframe) —
+        from meta.json when available, else by resolving the chain."""
+        meta_path = os.path.join(self.cfg.directory, f"step_{step:08d}",
+                                 "meta.json")
+        try:
+            with open(meta_path) as f:
+                depth = json.load(f).get("chain_depth")
+            if depth is not None:
+                return int(depth)
+        except (OSError, ValueError):
+            pass
+        return len(delta_mod.resolve_chain(self.cfg.directory, step)) - 1
+
+    def _delta_base(self) -> int | None:
+        """The step the next save should delta against, or None when a
+        keyframe is due (no previous step, chain at the delta_every
+        cadence, or an unreadable/broken chain — start fresh)."""
+        latest = self.latest_step()
+        if latest is None:
+            return None
+        try:
+            depth = self._chain_depth(latest)
+        except (OSError, ValueError):
+            return None
+        if depth + 1 >= self.cfg.delta_every:
+            return None
+        return latest
+
+    def _base_entries(self, base_step: int) -> dict:
+        """Quantized entries of the base frame: the last save's, cached
+        in memory, or chain-reconstructed from disk on a cache miss (e.g.
+        a manager restarted mid-chain)."""
+        if self._base_cache is not None and self._base_cache[0] == base_step:
+            return self._base_cache[1]
+        return delta_mod.restore_levels(self.cfg.directory, base_step)
+
+    def _base_step_of(self, step: int) -> int | None:
+        """The step ``step`` chains to (delta manifests name it), or None
+        for keyframes / unreadable steps."""
+        try:
+            return delta_mod.base_step_of(self.cfg.directory, step)
+        except (OSError, ValueError):
+            return None
+
     def _retain(self):
+        """Keep the last ``keep`` steps plus the transitive closure of
+        their base chains — a base referenced by a live P-frame chain is
+        never GC'd, no matter how old it is."""
         steps = self.steps()
-        for s in steps[:-self.cfg.keep]:
-            shutil.rmtree(os.path.join(self.cfg.directory,
-                                       f"step_{s:08d}"), ignore_errors=True)
+        live = set(steps[-self.cfg.keep:]) if self.cfg.keep else set(steps)
+        frontier = list(live)
+        while frontier:
+            base = self._base_step_of(frontier.pop())
+            if base is not None and base not in live:
+                live.add(base)
+                frontier.append(base)
+        for s in steps:
+            if s not in live:
+                shutil.rmtree(os.path.join(self.cfg.directory,
+                                           f"step_{s:08d}"),
+                              ignore_errors=True)
 
     def save(self, state, step: int, extra_meta: dict | None = None,
              blocking: bool | None = None, mesh=None):
@@ -135,6 +215,10 @@ class CheckpointManager:
         snapshot = jax.device_get(state)
         blocking = (not self.cfg.async_save) if blocking is None else blocking
         codec = self._codec()
+        if self.cfg.delta_every > 0 and not hasattr(codec, "compress_delta"):
+            raise ValueError(
+                f"delta_every={self.cfg.delta_every} needs a delta-capable "
+                f"codec (e.g. codec='deepcabac-delta'), got {codec.name!r}")
 
         def work():
             flat_p = flatten_tree(snapshot["params"])
@@ -146,15 +230,35 @@ class CheckpointManager:
             np.savez(bio, **other)
             buf["state.npz"] = bio.getvalue()
             meta_extra = {}
-            if self.cfg.sharded:
+            base_step = self._delta_base() if self.cfg.delta_every > 0 \
+                else None
+            if base_step is not None:
+                coder = codec.coder
+                base_entries = self._base_entries(base_step)
+                dentries = codec.delta_entries(flat_p, base_entries)
+                payloads, manifest = delta_mod.write_delta(
+                    dentries, codec_name=codec.name,
+                    base=delta_mod.base_ref(self.cfg.directory, base_step),
+                    num_gr=coder.num_gr, chunk_size=coder.chunk_size,
+                    workers=self.cfg.shard_workers)
+                buf.update(payloads)
+                buf[sharded.MANIFEST_NAME] = json.dumps(
+                    manifest, indent=1).encode()
+                compressed = sum(len(b) for b in payloads.values())
+                self._base_cache = (step,
+                                    codec.reconstruct_entries(dentries))
+                meta_extra = {"kind": "delta", "base_step": base_step,
+                              "chain_depth":
+                                  self._chain_depth(base_step) + 1}
+            elif self.cfg.sharded:
                 kw = {}
                 coder = getattr(codec, "coder", None)
                 for attr in ("num_gr", "chunk_size"):
                     if coder is not None and hasattr(coder, attr):
                         kw[attr] = getattr(coder, attr)
+                entries = codec.quantize_entries(flat_p)
                 payloads, manifest = sharded.write_sharded(
-                    codec.quantize_entries(flat_p), mesh,
-                    codec_name=codec.name,
+                    entries, mesh, codec_name=codec.name,
                     workers=self.cfg.shard_workers, **kw)
                 buf.update(payloads)
                 buf[sharded.MANIFEST_NAME] = json.dumps(
@@ -163,9 +267,17 @@ class CheckpointManager:
                 meta_extra = {"sharded": True,
                               "shard_files": len(payloads),
                               "save_mesh": manifest["mesh"]}
+                if self.cfg.delta_every > 0:
+                    self._base_cache = (step, entries)
+                    meta_extra = {**meta_extra, "kind": "keyframe",
+                                  "chain_depth": 0}
             else:
-                buf["params.dcbc"] = codec.compress(flat_p).blob
+                artifact = codec.compress(flat_p)
+                buf["params.dcbc"] = artifact.blob
                 compressed = len(buf["params.dcbc"])
+                if self.cfg.delta_every > 0:
+                    self._base_cache = (step, artifact.quantized)
+                    meta_extra = {"kind": "keyframe", "chain_depth": 0}
             raw_bytes = sum(v.nbytes for v in flat_p.values())
             # record only what was actually used: a config knob the chosen
             # codec ignores (delta_rel, or params_mode once codec= is set)
@@ -225,7 +337,19 @@ class CheckpointManager:
                 f"save) — pass shardings= to re-place a monolithic "
                 f"restore instead")
         if is_sharded:
-            if mesh is not None:
+            is_delta = sharded.load_manifest(d).get("base") is not None
+            if is_delta:
+                # chained (P-frame) step: resolve base chain + apply
+                # residuals, then place elastically if a mesh was given
+                if mesh is not None:
+                    flat = delta_mod.restore_on_mesh_delta(
+                        self.cfg.directory, step, mesh,
+                        workers=self.cfg.shard_workers)
+                else:
+                    flat = delta_mod.restore_flat_delta(
+                        self.cfg.directory, step,
+                        workers=self.cfg.shard_workers)
+            elif mesh is not None:
                 flat = sharded.restore_on_mesh(
                     d, mesh, workers=self.cfg.shard_workers)
             else:

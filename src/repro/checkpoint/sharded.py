@@ -51,6 +51,12 @@ from ..distributed.sharding import logical_axes_for_path, spec_for
 MANIFEST_NAME = "params.manifest.json"
 MANIFEST_FORMAT = "dcbc-manifest"
 MANIFEST_VERSION = 1
+# Manifest version 2 adds codec chaining: a "base" block naming the frame
+# a delta step applies to (repro.checkpoint.delta).  Plain sharded saves
+# keep writing version 1; readers here accept both but refuse to restore
+# a chained manifest without its chain (see _reject_delta).
+MANIFEST_VERSION_DELTA = 2
+MANIFEST_MAX_VERSION = MANIFEST_VERSION_DELTA
 
 
 # ---------------------------------------------------------------------------
@@ -341,11 +347,23 @@ def load_manifest(directory: str) -> dict:
         manifest = json.load(f)
     if manifest.get("format") != MANIFEST_FORMAT:
         raise ValueError(f"{path}: not a {MANIFEST_FORMAT} manifest")
-    if manifest.get("manifest_version", 0) > MANIFEST_VERSION:
+    if manifest.get("manifest_version", 0) > MANIFEST_MAX_VERSION:
         raise ValueError(
             f"{path}: manifest version {manifest['manifest_version']} "
-            f"(this reader handles <= {MANIFEST_VERSION})")
+            f"(this reader handles <= {MANIFEST_MAX_VERSION})")
     return manifest
+
+
+def _reject_delta(manifest: dict, directory: str, caller: str) -> None:
+    """Chained (delta) manifests cannot be restored standalone — their
+    records are residuals against the base frame the manifest names."""
+    if manifest.get("base") is not None:
+        raise ValueError(
+            f"{directory}: this manifest is a delta (P-frame) step chained "
+            f"to base step {manifest['base'].get('step')!r}; {caller} "
+            f"cannot restore it standalone — use "
+            f"repro.checkpoint.delta.restore_flat_delta / "
+            f"restore_on_mesh_delta, which resolve the chain")
 
 
 def manifest_dir(directory: str) -> str:
@@ -498,6 +516,7 @@ def restore_flat(directory: str, *, opts: DecodeOptions | None = None,
     deployments / template-driven checkpoint loads)."""
     directory = manifest_dir(directory)
     manifest = load_manifest(directory)
+    _reject_delta(manifest, directory, "restore_flat")
     if verify:
         verify_files(directory, manifest)
     items = sorted(manifest["tensors"].items())
@@ -560,6 +579,7 @@ def restore_on_mesh(directory: str, mesh, *, rules=None,
     ``workers`` > 1 decodes tensors' slices on a thread pool."""
     directory = manifest_dir(directory)
     manifest = load_manifest(directory)
+    _reject_delta(manifest, directory, "restore_on_mesh")
     if verify:
         verify_files(directory, manifest)
     num_gr = manifest.get("num_gr")
@@ -583,6 +603,7 @@ def restore_local_slices(directory: str, mesh, local_devices,
     mesh = MeshSpec.from_any(mesh)
     directory = manifest_dir(directory)
     manifest = load_manifest(directory)
+    _reject_delta(manifest, directory, "restore_local_slices")
     num_gr = manifest.get("num_gr")
     jobs = []
     devs_by_box: dict[tuple, list] = {}

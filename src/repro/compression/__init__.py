@@ -10,7 +10,8 @@ same three strategies behind one :class:`Codec`:
     tree = compression.decompress(artifact.blob, like=params)
 
 Registered codecs: ``deepcabac-v2``, ``deepcabac-v3`` (lane-scheduled
-CABAC, container v3), ``ckpt-nearest``, ``serve-q8``, ``huffman``,
+CABAC, container v3), ``deepcabac-delta`` (temporal "P-frame" residual
+coding, container v4), ``ckpt-nearest``, ``serve-q8``, ``huffman``,
 ``raw`` (see docs/compression_api.md).
 
 Import discipline: only the leaf modules (``artifact``, ``q8``, ``tree``)
@@ -27,11 +28,13 @@ from .tree import flatten_tree, unflatten_like  # noqa: F401
 
 _LAZY = {
     "Codec": "codec",
+    "DeltaCodec": "codec",
     "decompress": "codec",
     "iter_decompress": "codec",
     "DecodeOptions": "codec",
     "EntropyCoder": "coders",
     "CabacCoder": "coders",
+    "CabacDeltaCoder": "coders",
     "CabacV3Coder": "coders",
     "HuffmanCoder": "coders",
     "RawLevelCoder": "coders",

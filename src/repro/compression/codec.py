@@ -15,10 +15,11 @@ from typing import Callable
 
 import numpy as np
 
-from ..core.codec import (DecodeOptions, compressed_size_report,
-                          decode_state_dict, decode_state_dict_batched,
-                          iter_decode_state_dict)
+from ..core.codec import (DecodeOptions, DeltaTensor, QuantizedTensor,
+                          compressed_size_report, decode_state_dict,
+                          decode_state_dict_batched, iter_decode_state_dict)
 from ..core.container import ContainerWriter
+from ..core.quant import nearest_level
 from .artifact import Artifact
 from .coders import EntropyCoder
 from .quantizers import Quantizer
@@ -78,8 +79,10 @@ class Codec:
                 entries[name] = w
         return entries
 
-    def compress(self, tree) -> Artifact:
-        entries = self.quantize_entries(tree)
+    def compress_entries(self, entries: dict) -> Artifact:
+        """Entropy-code an already-quantized flat entry dict (the output
+        of :meth:`quantize_entries` — or of ``DeltaCodec.quantize_like``
+        for a step-locked frame) without re-quantizing."""
         writer = ContainerWriter()
         for name, e in entries.items():
             if isinstance(e, np.ndarray):
@@ -96,5 +99,114 @@ class Codec:
                         hyperparams={"codec": self.name, **self.hyperparams},
                         quantized=entries)
 
+    def compress(self, tree) -> Artifact:
+        return self.compress_entries(self.quantize_entries(tree))
+
     def decompress(self, blob: bytes, like=None, dequantize: bool = True):
         return decompress(blob, like=like, dequantize=dequantize)
+
+
+@dataclass
+class DeltaCodec(Codec):
+    """Temporal delta ("P-frame") codec.
+
+    Keyframes (I-frames) go through the inherited :meth:`Codec.compress` —
+    a plain lane-scheduled container.  :meth:`compress_delta` codes a new
+    frame against a base frame's quantized entries: the new frame is
+    quantized on the *base tensor's grid* (step locking — no per-frame
+    std recomputation), the integer-level residual is temporal-context
+    CABAC coded, and reconstruction is therefore bit-identical to the
+    direct encoding of the same step-locked frame, with zero drift across
+    chains of any depth.  Tensors with no compatible base (new name,
+    shape change, raw-in-base) fall back to full intra records inside the
+    same container.
+    """
+
+    delta_coder: EntropyCoder | None = None
+
+    def _lockable(self, name, w, base) -> bool:
+        quantizable = (self.quantizer is not None and w.size > 0
+                       and (self.policy is None or self.policy(name, w)))
+        return (quantizable and isinstance(base, QuantizedTensor)
+                and base.shape == tuple(np.asarray(w).shape)
+                and base.step > 0)
+
+    def delta_entries(self, tree, base_entries: dict) -> dict:
+        """Flatten the new frame; every tensor with a compatible base
+        entry is quantized on the *base's* grid (step locking) and becomes
+        a :class:`DeltaTensor` residual against the base levels; the rest
+        follow the codec's own quantizer/policy as full intra entries."""
+        out: dict = {}
+        for name, w in flatten_tree(tree).items():
+            base = base_entries.get(name)
+            if self._lockable(name, w, base):
+                w_arr = np.asarray(w)
+                levels = nearest_level(
+                    w_arr.astype(np.float64).ravel(),
+                    base.step).reshape(w_arr.shape)
+                resid = levels - base.levels.astype(np.int64)
+                out[name] = DeltaTensor(resid=resid, base=base.levels,
+                                        step=base.step,
+                                        dtype=str(w_arr.dtype))
+            elif (self.quantizer is not None and w.size > 0
+                    and (self.policy is None or self.policy(name, w))):
+                out[name] = self.quantizer.quantize(name, w)
+            else:
+                out[name] = w
+        return out
+
+    def quantize_like(self, tree, base_entries: dict) -> dict:
+        """The step-locked quantization of the new frame — the frame a
+        base + delta chain reconstructs bit-identically.  Encoding these
+        entries directly (``Codec.compress`` path) is the monolithic
+        reference the delta tests pin against."""
+        return self.reconstruct_entries(
+            self.delta_entries(tree, base_entries))
+
+    @staticmethod
+    def reconstruct_entries(dentries: dict) -> dict:
+        """New-frame entries (QuantizedTensor / Q8Tensor / ndarray) from a
+        :meth:`delta_entries` dict — what a decoder of the chain yields,
+        and what the next link's ``base_entries`` should be."""
+        out: dict = {}
+        for name, e in dentries.items():
+            if isinstance(e, DeltaTensor):
+                out[name] = QuantizedTensor(
+                    e.new_levels().reshape(e.shape), e.step, e.dtype)
+            else:
+                out[name] = e
+        return out
+
+    def compress_delta(self, tree, base_entries: dict) -> Artifact:
+        """Encode ``tree`` as a P-frame against ``base_entries`` (the flat
+        quantized entries of the base frame, e.g. ``Artifact.quantized``
+        of the previous save).  ``Artifact.quantized`` holds the
+        *reconstructed new frame* so callers can chain the next delta
+        without re-decoding."""
+        if self.delta_coder is None:
+            raise ValueError(
+                f"codec {self.name!r} has no delta coder; use compress()")
+        dentries = self.delta_entries(tree, base_entries)
+        writer = ContainerWriter()
+        n_delta = 0
+        for name, e in dentries.items():
+            if isinstance(e, DeltaTensor):
+                self.delta_coder.add_record(writer, name, e)
+                n_delta += 1
+            elif isinstance(e, np.ndarray):
+                writer.add_raw(name, e)
+            elif self.coder is None:
+                raise ValueError(
+                    f"codec {self.name!r} quantized {name} but has no "
+                    f"entropy coder")
+            else:
+                self.coder.add_record(writer, name, e)
+        blob = writer.tobytes()
+        new_entries = self.reconstruct_entries(dentries)
+        return Artifact(
+            blob=blob,
+            report={**compressed_size_report(new_entries, blob),
+                    "delta_records": n_delta},
+            hyperparams={"codec": self.name, "delta": True,
+                         **self.hyperparams},
+            quantized=new_entries)

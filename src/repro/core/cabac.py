@@ -191,6 +191,31 @@ class RangeDecoder:
 
 
 # ---------------------------------------------------------------------------
+# Temporal context classes (delta / "P-frame" coding)
+# ---------------------------------------------------------------------------
+
+# Residuals between two checkpoints are coded with a *temporal-context*
+# CABAC mode: every element selects one of TEMPORAL_CLASSES context banks
+# by the significance of its co-located previous-frame level — the
+# inter-frame analogue of the sigFlag's previous-weight conditioning.
+# Class 0: prev level was zero; class 1: small (|prev| <= TC_SMALL_MAX);
+# class 2: large.  The thresholds are part of the wire format (both sides
+# derive classes from the shared base frame; nothing is transmitted), so
+# changing them is a container-version event.
+TEMPORAL_CLASSES = 3
+TC_SMALL_MAX = 2
+
+
+def temporal_classes(prev_levels) -> np.ndarray:
+    """Per-element context-bank class of a delta stream, derived from the
+    co-located base-frame levels.  Encoder and decoder call this on the
+    *same* base levels, so the class arrays — and therefore every context
+    index — agree bit-for-bit across the scalar/numpy/C engines."""
+    a = np.abs(np.asarray(prev_levels, dtype=np.int64).ravel())
+    return (a > 0).astype(np.int64) + (a > TC_SMALL_MAX).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
 # Rate bookkeeping helpers (used by analysis & the RD rate model)
 # ---------------------------------------------------------------------------
 

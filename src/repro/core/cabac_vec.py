@@ -46,6 +46,7 @@ from .cabac import (ADAPT_SHIFT, MASK32, PROB_BITS, PROB_HALF, PROB_MAX,
 __all__ = [
     "available_backends", "resolve_backend",
     "encode_lanes", "decode_lanes",
+    "encode_lanes_tc", "decode_lanes_tc",
     "VecRangeEncoder", "VecRangeDecoder",
 ]
 
@@ -208,10 +209,13 @@ _P_SIG, _P_SIGN, _P_GR, _P_EGE, _P_BYP, _P_DONE = range(6)
 
 
 def _decode_lanes_numpy(payloads: list[bytes], counts: np.ndarray,
-                        num_gr: int) -> list[np.ndarray]:
+                        num_gr: int,
+                        cls_arrays: list[np.ndarray] | None = None
+                        ) -> list[np.ndarray]:
     n = len(payloads)
     counts = np.asarray(counts, dtype=_I64)
-    nctx = B.num_contexts(num_gr)
+    base_nctx = B.num_contexts(num_gr)
+    nctx = B.num_contexts_tc(num_gr) if cls_arrays is not None else base_nctx
     eg_base = B.ctx_eg_base(num_gr)
     eg_last = eg_base + B.EG_CTXS - 1
     dec = VecRangeDecoder(payloads, nctx)
@@ -228,6 +232,16 @@ def _decode_lanes_numpy(payloads: list[bytes], counts: np.ndarray,
     iota = np.arange(n)                         # keep writing to out[:, c]
     sign = np.ones(n, dtype=_I64)
 
+    # Temporal-context mode: per-lane class of the value currently being
+    # decoded, gathered by out_idx (classes are known up front — they come
+    # from the shared base frame, not from the stream).
+    cls_pad = None
+    if cls_arrays is not None:
+        cls_pad = np.zeros((n, maxc + 1), dtype=_I64)
+        for i, c in enumerate(cls_arrays):
+            c = np.asarray(c, dtype=_I64).ravel()
+            cls_pad[i, :c.size] = c
+
     one = np.ones(n, dtype=_I64)
     while not bool((phase == _P_DONE).all()):
         # ctx of the bin each lane decodes this step (selected by phase);
@@ -236,6 +250,8 @@ def _decode_lanes_numpy(payloads: list[bytes], counts: np.ndarray,
               np.where(phase == _P_SIGN, B.CTX_SIGN,
               np.where(phase == _P_GR, B.CTX_GR_BASE + jj - 1,
                        np.minimum(eg_base + jj, eg_last))))
+        if cls_pad is not None:
+            ctx = ctx + cls_pad[iota, out_idx] * base_nctx
         is_byp = phase >= _P_BYP
         bit = dec.decode_bins(ctx, is_byp)
         b1 = bit.astype(bool)
@@ -300,12 +316,18 @@ def _decode_lanes_numpy(payloads: list[bytes], counts: np.ndarray,
     return [out[i, :counts[i]] for i in range(n)]
 
 
-def _encode_lanes_numpy(level_arrays: list[np.ndarray],
-                        num_gr: int) -> list[bytes]:
+def _encode_lanes_numpy(level_arrays: list[np.ndarray], num_gr: int,
+                        cls_arrays: list[np.ndarray] | None = None
+                        ) -> list[bytes]:
     n = len(level_arrays)
-    nctx = B.num_contexts(num_gr)
-    expanded = [B.expand_bins(np.asarray(lv).ravel(), num_gr)
-                for lv in level_arrays]
+    if cls_arrays is not None:
+        nctx = B.num_contexts_tc(num_gr)
+        expanded = [B.expand_bins_tc(np.asarray(lv).ravel(), cls, num_gr)
+                    for lv, cls in zip(level_arrays, cls_arrays)]
+    else:
+        nctx = B.num_contexts(num_gr)
+        expanded = [B.expand_bins(np.asarray(lv).ravel(), num_gr)
+                    for lv in level_arrays]
     nbins = np.asarray([len(b) for b, _ in expanded], dtype=_I64)
     tmax = int(nbins.max(initial=0))
     bits = np.zeros((n, tmax), dtype=_I64)
@@ -373,6 +395,16 @@ def _build_kernel():
         p(ctypes.c_int64), p(ctypes.c_int64), p(ctypes.c_uint8),
         ctypes.c_int64, p(ctypes.c_int64), ctypes.c_int32, ctypes.c_int32]
     lib.cabac_encode_lanes.restype = None
+    lib.cabac_decode_lanes_tc.argtypes = [
+        p(ctypes.c_uint8), p(ctypes.c_int64), p(ctypes.c_int64),
+        p(ctypes.c_int64), p(ctypes.c_int64), ctypes.c_int32,
+        ctypes.c_int32]
+    lib.cabac_decode_lanes_tc.restype = ctypes.c_int32
+    lib.cabac_encode_lanes_tc.argtypes = [
+        p(ctypes.c_int64), p(ctypes.c_int64), p(ctypes.c_int64),
+        p(ctypes.c_uint8), ctypes.c_int64, p(ctypes.c_int64),
+        ctypes.c_int32, ctypes.c_int32]
+    lib.cabac_encode_lanes_tc.restype = None
     return lib
 
 
@@ -394,7 +426,9 @@ def _ptr(arr, ctype):
 
 
 def _decode_lanes_c(payloads: list[bytes], counts: np.ndarray,
-                    num_gr: int, lib) -> list[np.ndarray]:
+                    num_gr: int, lib,
+                    cls_arrays: list[np.ndarray] | None = None
+                    ) -> list[np.ndarray]:
     n = len(payloads)
     counts = np.asarray(counts, dtype=_I64)
     data = np.frombuffer(b"".join(payloads), dtype=np.uint8)
@@ -405,11 +439,23 @@ def _decode_lanes_c(payloads: list[bytes], counts: np.ndarray,
     ooff = np.zeros(n + 1, dtype=_I64)
     np.cumsum(counts, out=ooff[1:])
     out = np.empty(max(int(ooff[-1]), 1), dtype=_I64)
-    ret = lib.cabac_decode_lanes(_ptr(data, ctypes.c_uint8),
-                                 _ptr(doff, ctypes.c_int64),
-                                 _ptr(out, ctypes.c_int64),
-                                 _ptr(ooff, ctypes.c_int64),
-                                 np.int32(n), np.int32(num_gr))
+    if cls_arrays is not None:
+        cls = (np.concatenate([np.asarray(c, dtype=_I64).ravel()
+                               for c in cls_arrays])
+               if int(ooff[-1]) else np.zeros(1, dtype=_I64))
+        cls = np.ascontiguousarray(cls, dtype=_I64)
+        ret = lib.cabac_decode_lanes_tc(_ptr(data, ctypes.c_uint8),
+                                        _ptr(doff, ctypes.c_int64),
+                                        _ptr(cls, ctypes.c_int64),
+                                        _ptr(out, ctypes.c_int64),
+                                        _ptr(ooff, ctypes.c_int64),
+                                        np.int32(n), np.int32(num_gr))
+    else:
+        ret = lib.cabac_decode_lanes(_ptr(data, ctypes.c_uint8),
+                                     _ptr(doff, ctypes.c_int64),
+                                     _ptr(out, ctypes.c_int64),
+                                     _ptr(ooff, ctypes.c_int64),
+                                     np.int32(n), np.int32(num_gr))
     if ret:
         raise OverflowError(
             "cabac_vec decode hit a level beyond 2**61 - 1; the stream "
@@ -417,8 +463,9 @@ def _decode_lanes_c(payloads: list[bytes], counts: np.ndarray,
     return [out[ooff[i]:ooff[i + 1]] for i in range(n)]
 
 
-def _encode_lanes_c(level_arrays: list[np.ndarray], num_gr: int,
-                    lib) -> list[bytes]:
+def _encode_lanes_c(level_arrays: list[np.ndarray], num_gr: int, lib,
+                    cls_arrays: list[np.ndarray] | None = None
+                    ) -> list[bytes]:
     n = len(level_arrays)
     flats = [np.ascontiguousarray(np.asarray(lv).ravel(), dtype=_I64)
              for lv in level_arrays]
@@ -431,12 +478,25 @@ def _encode_lanes_c(level_arrays: list[np.ndarray], num_gr: int,
     stride = (maxc * (num_gr + 130)) // 8 + 32
     out = np.empty((n, stride), dtype=np.uint8)
     out_lens = np.zeros(n, dtype=_I64)
-    lib.cabac_encode_lanes(_ptr(levels, ctypes.c_int64),
-                           _ptr(loff, ctypes.c_int64),
-                           _ptr(out, ctypes.c_uint8),
-                           np.int64(stride),
-                           _ptr(out_lens, ctypes.c_int64),
-                           np.int32(n), np.int32(num_gr))
+    if cls_arrays is not None:
+        cls = (np.concatenate([np.asarray(c, dtype=_I64).ravel()
+                               for c in cls_arrays])
+               if int(loff[-1]) else np.zeros(1, dtype=_I64))
+        cls = np.ascontiguousarray(cls, dtype=_I64)
+        lib.cabac_encode_lanes_tc(_ptr(levels, ctypes.c_int64),
+                                  _ptr(cls, ctypes.c_int64),
+                                  _ptr(loff, ctypes.c_int64),
+                                  _ptr(out, ctypes.c_uint8),
+                                  np.int64(stride),
+                                  _ptr(out_lens, ctypes.c_int64),
+                                  np.int32(n), np.int32(num_gr))
+    else:
+        lib.cabac_encode_lanes(_ptr(levels, ctypes.c_int64),
+                               _ptr(loff, ctypes.c_int64),
+                               _ptr(out, ctypes.c_uint8),
+                               np.int64(stride),
+                               _ptr(out_lens, ctypes.c_int64),
+                               np.int32(n), np.int32(num_gr))
     # Drop the leading dummy zero byte, like RangeEncoder.finish().
     return [out[i, 1:out_lens[i]].tobytes() for i in range(n)]
 
@@ -494,3 +554,66 @@ def encode_lanes(level_arrays: list[np.ndarray],
     if resolve_backend(backend) == "c":
         return _encode_lanes_c(level_arrays, num_gr, _get_kernel())
     return _encode_lanes_numpy(level_arrays, num_gr)
+
+
+# ---------------------------------------------------------------------------
+# Temporal-context ("P-frame") lanes
+# ---------------------------------------------------------------------------
+
+def _check_classes(cls_arrays, sizes) -> None:
+    from .cabac import TEMPORAL_CLASSES
+    if len(cls_arrays) != len(sizes):
+        raise ValueError("one class array per lane is required")
+    for cls, size in zip(cls_arrays, sizes):
+        c = np.asarray(cls)
+        if c.size != size:
+            raise ValueError(
+                f"class array of {c.size} values for a lane of {size}")
+        if c.size and (int(c.min()) < 0
+                       or int(c.max()) >= TEMPORAL_CLASSES):
+            raise ValueError("temporal class ids must be in "
+                             f"[0, {TEMPORAL_CLASSES})")
+
+
+def decode_lanes_tc(payloads: list[bytes], cls_arrays: list[np.ndarray],
+                    num_gr: int = B.DEFAULT_NUM_GR,
+                    backend: str = "auto") -> list[np.ndarray]:
+    """Temporal-context decode: lane ``i`` yields ``len(cls_arrays[i])``
+    levels, each coded in the context bank named by its class id (derived
+    from the co-located base-frame level via ``cabac.temporal_classes``).
+    Bit-exact with ``RangeDecoder`` + ``decode_levels_tc`` per lane; the
+    ``OverflowError`` contract matches :func:`decode_lanes`."""
+    if not payloads:
+        return []
+    counts = np.asarray([np.asarray(c).size for c in cls_arrays],
+                        dtype=_I64)
+    _check_classes(cls_arrays, counts.tolist())
+    if resolve_backend(backend) == "c":
+        return _decode_lanes_c(payloads, counts, num_gr, _get_kernel(),
+                               cls_arrays=cls_arrays)
+    return _decode_lanes_numpy(payloads, counts, num_gr,
+                               cls_arrays=cls_arrays)
+
+
+def encode_lanes_tc(level_arrays: list[np.ndarray],
+                    cls_arrays: list[np.ndarray],
+                    num_gr: int = B.DEFAULT_NUM_GR,
+                    backend: str = "auto") -> list[bytes]:
+    """Temporal-context encode; byte-exact with ``RangeEncoder`` +
+    ``encode_levels_tc`` per lane."""
+    if not level_arrays:
+        return []
+    sizes = []
+    for lv in level_arrays:
+        a = np.asarray(lv)
+        sizes.append(a.size)
+        if a.size and int(np.abs(a).max()) > MAX_ABS_LEVEL:
+            raise OverflowError(
+                "cabac_vec lanes code |level| <= 2**61 - 1; use the scalar "
+                "coder for wider values")
+    _check_classes(cls_arrays, sizes)
+    if resolve_backend(backend) == "c":
+        return _encode_lanes_c(level_arrays, num_gr, _get_kernel(),
+                               cls_arrays=cls_arrays)
+    return _encode_lanes_numpy(level_arrays, num_gr,
+                               cls_arrays=cls_arrays)

@@ -7,7 +7,8 @@ Layout (little-endian):
       name: u16 len + utf8
       encoding: u8         (0 = raw bytes, 1 = cabac levels,
                             2 = huffman levels, 3 = int8 levels + scales,
-                            4 = cabac levels + lane metadata)
+                            4 = cabac levels + lane metadata,
+                            5 = temporal-context cabac level residuals)
       dtype str: u8 len + ascii   (original array dtype)
       ndim u8, dims u32[ndim]
       if encoding == 1:
@@ -18,7 +19,7 @@ Layout (little-endian):
       if encoding == 3:
         scale_ndim u8, scale_dims u32[scale_ndim]
                              (payload: f32 scales then int8 levels)
-      if encoding == 4:
+      if encoding == 4 or encoding == 5:
         step f64 | num_gr u8 | chunk_size u32 | total_count u64
         num_chunks u32 | chunk_byte_lens u32[num_chunks]
         chunk_counts u32[num_chunks]
@@ -30,10 +31,17 @@ huffman and q8 encodings; version 3 adds the lane-scheduled cabac record
 only the header grows per-chunk value counts and the total count, so a
 reader can schedule all chunks of a tensor (or of a whole state dict)
 into one lane-parallel decode batch without deriving counts from shapes
-(repro.core.cabac_vec).  The writer emits the lowest version that covers
-the records present, so pre-existing readers and blobs stay
-byte-compatible on the common path, and older readers reject newer blobs
-with a versioned error instead of misparsing them.
+(repro.core.cabac_vec).  Version 4 adds the temporal-context delta
+record (encoding 5): its header layout is identical to encoding 4, but
+the levels are *residuals* against a base frame named outside the
+container (the delta chain manifest, ``repro.checkpoint.delta``), and
+the bitstream uses the temporal-context CABAC mode — each value's
+context bank is selected by the class of its co-located base-frame level
+(``cabac.temporal_classes``), so a delta record is undecodable without
+its base.  The writer emits the lowest version that covers the records
+present, so pre-existing readers and blobs stay byte-compatible on the
+common path, and older readers reject newer blobs with a versioned error
+instead of misparsing them.
 
 Chunks are independently decodable (fresh context state per chunk) so a
 multi-host restore can fan decode out across hosts/processes — or across
@@ -59,13 +67,15 @@ MAGIC = b"DCBC"
 VERSION = 1
 VERSION_V2 = 2
 VERSION_V3 = 3
-SUPPORTED_VERSIONS = (VERSION, VERSION_V2, VERSION_V3)
+VERSION_V4 = 4
+SUPPORTED_VERSIONS = (VERSION, VERSION_V2, VERSION_V3, VERSION_V4)
 HEADER_LEN = 10          # magic + version u16 + num_records u32
 ENC_RAW = 0
 ENC_CABAC = 1
 ENC_HUFF = 2
 ENC_Q8 = 3
 ENC_CABAC_V3 = 4
+ENC_CABAC_DELTA = 5
 
 
 @dataclass
@@ -93,6 +103,7 @@ class ContainerWriter:
         self._records: list[bytes] = []
         self._needs_v2 = False
         self._needs_v3 = False
+        self._needs_v4 = False
 
     def add_raw(self, name: str, arr: np.ndarray) -> None:
         payload = np.ascontiguousarray(arr).tobytes()
@@ -141,6 +152,34 @@ class ContainerWriter:
         self._records.append(hdr + struct.pack("<Q", len(payload)) + payload)
         self._needs_v3 = True
 
+    def add_cabac_delta(self, name: str, dtype: str, shape: tuple[int, ...],
+                        step: float, num_gr: int, chunk_size: int,
+                        chunk_payloads: list[bytes],
+                        chunk_counts: list[int]) -> None:
+        """Temporal-context-coded level *residuals* against a base frame.
+
+        Header layout is identical to :meth:`add_cabac_v3`; the chunk
+        bitstreams differ (temporal-context banks, cabac_vec
+        ``encode_lanes_tc``) and can only be decoded next to the base
+        frame's levels — the chain linkage lives in the delta manifest
+        (``repro.checkpoint.delta``), not in the container."""
+        if len(chunk_counts) != len(chunk_payloads):
+            raise ValueError(
+                f"{len(chunk_counts)} chunk counts for "
+                f"{len(chunk_payloads)} chunk payloads")
+        total = sum(int(c) for c in chunk_counts)
+        payload = b"".join(chunk_payloads)
+        ndim = len(shape)
+        nch = len(chunk_payloads)
+        hdr = (_pack_str(name, "<H") + struct.pack("<B", ENC_CABAC_DELTA)
+               + _pack_str(dtype, "<B")
+               + struct.pack("<B", ndim) + struct.pack(f"<{ndim}I", *shape)
+               + struct.pack("<dBIQI", step, num_gr, chunk_size, total, nch)
+               + struct.pack(f"<{nch}I", *[len(c) for c in chunk_payloads])
+               + struct.pack(f"<{nch}I", *chunk_counts))
+        self._records.append(hdr + struct.pack("<Q", len(payload)) + payload)
+        self._needs_v4 = True
+
     def add_huffman(self, name: str, dtype: str, shape: tuple[int, ...],
                     step: float, payload: bytes) -> None:
         """Canonical-Huffman-coded levels; the payload carries its own
@@ -172,7 +211,8 @@ class ContainerWriter:
         self._needs_v2 = True
 
     def tobytes(self) -> bytes:
-        version = (VERSION_V3 if self._needs_v3
+        version = (VERSION_V4 if self._needs_v4
+                   else VERSION_V3 if self._needs_v3
                    else VERSION_V2 if self._needs_v2 else VERSION)
         head = MAGIC + struct.pack("<HI", version, len(self._records))
         return head + b"".join(self._records)
@@ -218,7 +258,7 @@ def _parse_record(data, view, off: int, label: str
             off += 17
             chunk_lens = struct.unpack_from(f"<{nchunks}I", data, off)
             off += 4 * nchunks
-        elif enc == ENC_CABAC_V3:
+        elif enc in (ENC_CABAC_V3, ENC_CABAC_DELTA):
             step, num_gr, chunk_size, total, nchunks = \
                 struct.unpack_from("<dBIQI", data, off)
             off += 25
@@ -268,7 +308,7 @@ def read_record_at(data, offset: int = 0
 
 
 class ContainerReader:
-    def __init__(self, data: bytes, max_version: int = VERSION_V3):
+    def __init__(self, data: bytes, max_version: int = VERSION_V4):
         """``max_version`` emulates an older reader generation (compat
         tests); production callers keep the default."""
         if len(data) < HEADER_LEN:

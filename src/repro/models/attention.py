@@ -49,9 +49,12 @@ def _cache_update(cache_arr, new_vals, cache_pos, delta):
     b = cache_arr.shape[0]
     return cache_arr.at[jnp.arange(b), cp].set(vals[:, 0])
 
-# legacy attend(impl=...) values -> registry impl names (shared with the
-# ModelConfig deprecation shim)
-from .config import LEGACY_ATTN_IMPLS  # noqa: E402
+# attend(impl=...) values -> registry impl names (the historical attend
+# vocabulary predates the kernel registry, so "naive"/"pallas_flash"
+# alias the registry's "ref"/"pallas")
+_ATTN_IMPLS = {"scan": "scan", "naive": "ref",
+               "pallas_flash": "pallas", "pallas": "pallas",
+               "interpret": "interpret", "ref": "ref"}
 
 
 def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
@@ -70,11 +73,11 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     """
     policy = policy or _kernels.KernelPolicy()
     if impl is not None:
-        if impl not in LEGACY_ATTN_IMPLS:
+        if impl not in _ATTN_IMPLS:
             raise ValueError(
                 f"unknown attention impl {impl!r}; "
-                f"one of {sorted(LEGACY_ATTN_IMPLS)}")
-        policy = policy.override("flash_attention", LEGACY_ATTN_IMPLS[impl])
+                f"one of {sorted(_ATTN_IMPLS)}")
+        policy = policy.override("flash_attention", _ATTN_IMPLS[impl])
     return _kernels.get("flash_attention")(q, k, v, qpos, kv_block=kv_block,
                                            kv_len=kv_len, policy=policy)
 

@@ -3,20 +3,11 @@
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from dataclasses import dataclass
 
 from .. import kernels as _kernels
 
 KernelPolicy = _kernels.KernelPolicy
-
-# legacy string fields -> registry impl mappings (single source of truth;
-# models.attention's attend(impl=...) shim uses the same table)
-LEGACY_Q8_IMPLS = {"ref": "ref", "pallas": "pallas",
-                   "interpret": "interpret"}
-LEGACY_ATTN_IMPLS = {"scan": "scan", "naive": "ref",
-                     "pallas_flash": "pallas", "pallas": "pallas",
-                     "interpret": "interpret", "ref": "ref"}
 
 
 @dataclass(frozen=True)
@@ -81,39 +72,16 @@ class ModelConfig:
     # serve.quantized.calibrate_kv_cache_delta (or ServeConfig.kv_cache_delta)
 
     # kernel selection: one policy for every registered op (platform
-    # dispatch, per-op impl pins, tuning cache) — see repro.kernels.registry
+    # dispatch, per-op impl pins, tuning cache) — see repro.kernels.registry.
+    # Per-op pins go through KernelPolicy(overrides={...}) / .override();
+    # the pre-registry q8_matmul_impl / attn_impl string fields are gone.
     kernels: KernelPolicy = KernelPolicy()
-    # DEPRECATED: legacy per-op strings; non-None values fold into
-    # ``kernels`` as overrides in __post_init__ (with a DeprecationWarning)
-    q8_matmul_impl: str | None = None   # ref | pallas | interpret
-    attn_impl: str | None = None        # scan | naive | pallas_flash
 
     # distribution / performance knobs (see distributed/sharding.py)
     remat: str = "block"           # none | block | dots
     scan_layers: bool = True
     attn_kv_block: int = 1024
     moe_impl: str = "scatter"      # scatter | dense
-
-    def __post_init__(self):
-        over = {}
-        if self.q8_matmul_impl is not None:
-            over["dequant_matmul"] = LEGACY_Q8_IMPLS[self.q8_matmul_impl]
-        if self.attn_impl is not None:
-            over["flash_attention"] = LEGACY_ATTN_IMPLS[self.attn_impl]
-        if over:
-            warnings.warn(
-                "ModelConfig.q8_matmul_impl / attn_impl are deprecated; "
-                "use ModelConfig.kernels=KernelPolicy(overrides=...) "
-                f"(folded {over} into the kernel policy)",
-                DeprecationWarning, stacklevel=3)
-            pol = self.kernels
-            for op, impl in over.items():
-                pol = pol.override(op, impl)
-            object.__setattr__(self, "kernels", pol)
-            # clear the legacy fields once folded: a later replace() must
-            # not re-fold them over an explicitly updated kernels policy
-            object.__setattr__(self, "q8_matmul_impl", None)
-            object.__setattr__(self, "attn_impl", None)
 
     @property
     def d_inner(self) -> int:      # ssm inner width

@@ -31,6 +31,13 @@ through ``repro.checkpoint.sharded`` — with a serving ``mesh`` set on the
 backend, only the shard files / v3 chunk ranges covering the mesh's local
 slices are read and decoded, and parameters arrive as mesh-sharded
 ``jax.Array``\\ s.  See docs/compression_api.md ("Sharded checkpoints").
+
+Live weight swap: a backend built with ``track_levels=True`` keeps the
+integer quantization levels of every entropy-decoded tensor resident, so
+:meth:`WeightBackend.apply_delta` can patch the serving weights from a
+delta ("P-frame") checkpoint step — residuals applied in level space,
+bit-identical to a cold start of the new frame — without re-decoding the
+whole model.  See docs/serving_api.md ("Live weight swap").
 """
 
 from __future__ import annotations
@@ -44,7 +51,9 @@ import numpy as np
 from ..compression.codec import DecodeOptions, iter_decompress
 from ..compression.quantizers import serve_q8_policy
 from ..compression.tree import _path_key
-from ..core.codec import Q8Tensor
+from ..core.codec import (Q8Tensor, QuantizedTensor, decode_delta_record,
+                          decode_record)
+from ..core.container import ENC_CABAC_DELTA, ContainerReader
 from .quantized import quantize_leaf, quantize_tree_q8
 
 
@@ -61,16 +70,117 @@ class WeightBackend:
     ``mesh`` scopes *manifest* cold starts to a serving mesh: entropy-
     coded tensors come back as mesh-sharded ``jax.Array``\\ s assembled
     from only the shards each local device's slice needs.
+
+    ``track_levels`` keeps each entropy-decoded tensor's integer
+    quantization levels resident next to the converted leaf, which is
+    what :meth:`apply_delta` needs to patch the weights live from a delta
+    ("P-frame") checkpoint step: residual records apply to the tracked
+    base levels in integer space, so the swapped-in weights are
+    bit-identical to a cold start of the new frame.  It costs one int64
+    copy of the quantized model host-side — leave it off for static
+    deployments.  See docs/serving_api.md ("Live weight swap").
     """
 
     name = "?"
 
-    def __init__(self, decode: DecodeOptions | None = None, mesh=None):
+    def __init__(self, decode: DecodeOptions | None = None, mesh=None,
+                 track_levels: bool = False):
         self.decode = decode or DecodeOptions()
         self.mesh = mesh
+        self.track_levels = track_levels
+        self._levels: dict[str, QuantizedTensor] | None = (
+            {} if track_levels else None)
 
     def load(self, cfg, source):
         raise NotImplementedError
+
+    # -- delta ("P-frame") live patching ------------------------------------
+
+    def _convert(self, name: str, rec, dtype):
+        """One decoded record -> this backend's resident leaf."""
+        return _to_array(rec, dtype)
+
+    def _fold(self, name: str, rec, dtype):
+        """The convert hook the streaming folds call: track the quantized
+        levels (when enabled) before handing the record to _convert."""
+        if self._levels is not None and isinstance(rec, QuantizedTensor):
+            self._levels[name] = rec
+        return self._convert(name, rec, dtype)
+
+    def _check_mesh_tracking(self, source) -> None:
+        if (self.track_levels and self.mesh is not None
+                and _is_manifest_source(source)):
+            raise RuntimeError(
+                "track_levels=True needs host-visible quantized levels, "
+                "but a manifest load with mesh= set assembles tensors "
+                "straight onto the mesh without materializing them — "
+                "load without mesh, or without track_levels")
+
+    def apply_delta(self, cfg, source) -> dict:
+        """Patch the resident weights from a delta (P-frame) checkpoint
+        step without a full reload.
+
+        ``source`` is the delta step directory (or its
+        ``params.manifest.json``).  Residual (``ENC_CABAC_DELTA``) records
+        are decoded against the tracked base levels and applied in integer
+        level space — the updated tensors are bit-identical to a cold
+        start of the new frame; full records in the same container (new /
+        reshaped tensors) replace their leaf outright.  The tracked
+        levels advance to the new frame, so chains of swaps keep working.
+
+        Returns the flat ``{name: leaf}`` updates (already converted to
+        this backend's representation); ``ServeSession.swap_weights``
+        installs them between batched decode steps."""
+        from ..checkpoint import delta as delta_mod
+        from ..checkpoint import sharded
+        if not self._levels:
+            raise RuntimeError(
+                f"{self.name} backend has no tracked base levels — build "
+                f"it with track_levels=True and load the base frame from "
+                f"a container blob or checkpoint manifest before applying "
+                f"deltas")
+        directory = sharded.manifest_dir(str(source))
+        if not os.path.exists(os.path.join(directory,
+                                           sharded.MANIFEST_NAME)):
+            raise ValueError(
+                f"{directory}: no {sharded.MANIFEST_NAME} — not a delta "
+                f"(P-frame) step; full frames go through load()")
+        manifest = sharded.load_manifest(str(source))
+        if manifest.get("base") is None:
+            raise ValueError(
+                f"{directory}: not a delta (P-frame) manifest — full "
+                f"frames go through load()")
+        path = os.path.join(directory, delta_mod.DELTA_FILE)
+        if not os.path.exists(path):
+            raise delta_mod.DeltaBaseMissingError(
+                f"{directory}: manifest present but {delta_mod.DELTA_FILE} "
+                f"is missing")
+        with open(path, "rb") as f:
+            blob = f.read()
+        specs = _template_specs(cfg)
+        updates: dict = {}
+        for hdr, payload in ContainerReader(blob):
+            spec = specs.get(hdr.name)
+            if spec is None:
+                continue                   # not part of this model
+            if tuple(hdr.shape) != tuple(spec.shape):
+                raise ValueError(
+                    f"{hdr.name}: delta record shape {tuple(hdr.shape)} "
+                    f"!= model {tuple(spec.shape)}")
+            if hdr.encoding == ENC_CABAC_DELTA:
+                base = self._levels.get(hdr.name)
+                if base is None:
+                    raise RuntimeError(
+                        f"{hdr.name}: residual record has no tracked base "
+                        f"levels — the resident weights were not loaded "
+                        f"from this chain's base frame")
+                rec = decode_delta_record(hdr, payload, base.levels,
+                                          dequantize=False, opts=self.decode)
+            else:
+                rec = decode_record(hdr, payload, dequantize=False,
+                                    opts=self.decode)
+            updates[hdr.name] = self._fold(hdr.name, rec, spec.dtype)
+        return updates
 
 
 # ---------------------------------------------------------------------------
@@ -242,13 +352,12 @@ class Bf16Backend(WeightBackend):
     name = "bf16"
 
     def load(self, cfg, source):
+        self._check_mesh_tracking(source)
         if _is_manifest_source(source):
-            return _manifest_tree(cfg, source,
-                                  lambda name, rec, dt: _to_array(rec, dt),
+            return _manifest_tree(cfg, source, self._fold,
                                   decode=self.decode, mesh=self.mesh)
         if isinstance(source, (bytes, bytearray, memoryview)):
-            return _stream_tree(cfg, bytes(source),
-                                lambda name, rec, dt: _to_array(rec, dt),
+            return _stream_tree(cfg, bytes(source), self._fold,
                                 decode=self.decode)
         return source
 
@@ -262,21 +371,23 @@ class Q8Backend(WeightBackend):
 
     name = "q8"
 
+    def _convert(self, name, rec, dt):
+        if isinstance(rec, Q8Tensor):
+            return _q8_leaf(rec)
+        arr = _to_array(rec, dt)
+        if serve_q8_policy(name, arr):
+            return quantize_leaf(arr)
+        return arr
+
     def load(self, cfg, source):
-        def convert(name, rec, dt):
-            if isinstance(rec, Q8Tensor):
-                return _q8_leaf(rec)
-            arr = _to_array(rec, dt)
-            if serve_q8_policy(name, arr):
-                return quantize_leaf(arr)
-            return arr
         if _is_manifest_source(source):
             # host-side conversion: every decoded tensor becomes an
             # in-memory {"q8","q8s"} leaf, so the mesh-sharded fast path
             # doesn't apply here
-            return _manifest_tree(cfg, source, convert, decode=self.decode)
+            return _manifest_tree(cfg, source, self._fold,
+                                  decode=self.decode)
         if isinstance(source, (bytes, bytearray, memoryview)):
-            return _stream_tree(cfg, bytes(source), convert,
+            return _stream_tree(cfg, bytes(source), self._fold,
                                 decode=self.decode)
         return quantize_tree_q8(source)
 
@@ -289,13 +400,15 @@ class ContainerBackend(WeightBackend):
 
     name = "container"
 
+    def _convert(self, name, rec, dt):
+        if isinstance(rec, Q8Tensor):
+            return _q8_leaf(rec)
+        return _to_array(rec, dt)
+
     def load(self, cfg, source):
-        def convert(name, rec, dt):
-            if isinstance(rec, Q8Tensor):
-                return _q8_leaf(rec)
-            return _to_array(rec, dt)
+        self._check_mesh_tracking(source)
         if _is_manifest_source(source):
-            return _manifest_tree(cfg, source, convert,
+            return _manifest_tree(cfg, source, self._fold,
                                   decode=self.decode, mesh=self.mesh)
         if not isinstance(source, (bytes, bytearray, memoryview)):
             raise TypeError(
@@ -303,7 +416,8 @@ class ContainerBackend(WeightBackend):
                 "checkpoint manifest path; got "
                 f"{type(source).__name__} — use the 'bf16' or 'q8' backend "
                 "for in-memory pytrees")
-        return _stream_tree(cfg, bytes(source), convert, decode=self.decode)
+        return _stream_tree(cfg, bytes(source), self._fold,
+                            decode=self.decode)
 
 
 register_backend("bf16", Bf16Backend)

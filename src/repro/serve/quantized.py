@@ -24,12 +24,6 @@ from ..compression.quantizers import quantize_leaf, quantize_tree_q8  # noqa: F4
 # path share one implementation.
 from .. import kernels as _kernels
 
-# DEPRECATED re-export: embed_lookup_q8 was promoted into the kernel
-# registry (kernels/embed_lookup, op "embed_lookup_q8"); import it from
-# repro.kernels or dispatch via kernels.get("embed_lookup_q8").
-embed_lookup_q8 = _kernels.embed_lookup_q8
-
-
 # single source of truth for q8-leaf detection lives beside the kernels
 # that consume the {"q8","q8s"} layout
 is_q8 = _kernels.is_q8_leaf

@@ -33,7 +33,7 @@ import numpy as np
 
 from ..models.config import ModelConfig
 from ..models.transformer import decode_step, forward, init_cache, prefill
-from .backends import resolve_backend
+from .backends import _insert, resolve_backend
 
 
 @dataclass(frozen=True)
@@ -178,6 +178,24 @@ class ServeSession:
     @property
     def pending(self) -> bool:
         return bool(self._queue) or self.num_active > 0
+
+    def swap_weights(self, source) -> int:
+        """Swap in a delta ("P-frame") checkpoint step at a batch
+        boundary: the backend decodes the step's residual records against
+        its tracked base levels (``WeightBackend.apply_delta``) and the
+        updated leaves replace their counterparts in ``self.params``.
+
+        In-flight requests keep their slots and KV caches — the next
+        :meth:`step` simply decodes with the new weights.  Leaf shapes,
+        dtypes and the tree structure are unchanged by construction (a
+        delta step is coded on the base frame's grid), so the jitted
+        prefill/decode functions don't recompile.  The backend must have
+        been built with ``track_levels=True`` and loaded from the chain's
+        base frame.  Returns the number of updated tensors."""
+        updates = self.backend.apply_delta(self.cfg, source)
+        for name, leaf in updates.items():
+            _insert(self.params, name, leaf)
+        return len(updates)
 
     def run(self, max_steps: int | None = None) -> None:
         """Step until every submitted request finished (or max_steps)."""

@@ -101,10 +101,38 @@ def build_v3() -> bytes:
     return w.tobytes()
 
 
+def v4_parts() -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(base levels, residual, intra levels) for the delta container:
+    the residual is sparse and small relative to the base — the P-frame
+    shape — and the base mixes all three temporal context classes
+    (zero / small / large)."""
+    base = _levels(300)
+    resid = ((np.arange(300, dtype=np.int64) * 31) % 7) - 3
+    resid[::4] = 0
+    return base, resid, _levels(40)
+
+
+def build_v4() -> bytes:
+    """temporal-context delta record (+ one intra v3 record) -> version 4
+    container (``ENC_CABAC_DELTA``)."""
+    from repro.core.codec import (encode_delta_chunks_batched,
+                                  encode_level_chunks_batched)
+    from repro.core.container import ContainerWriter
+    base, resid, intra = v4_parts()
+    w = ContainerWriter()
+    chunks, counts = encode_delta_chunks_batched(resid, base, 10, 64)
+    w.add_cabac_delta("delta", "float32", (20, 15), 0.125, 10, 64,
+                      chunks, counts)
+    chunks, counts = encode_level_chunks_batched(intra, 10, 64)
+    w.add_cabac_v3("intra", "bfloat16", (40,), 0.5, 10, 64, chunks, counts)
+    return w.tobytes()
+
+
 BUILDERS = {
     "v1_basic": build_v1,
     "v2_mixed": build_v2,
     "v3_lanes": build_v3,
+    "v4_delta": build_v4,
 }
 
 

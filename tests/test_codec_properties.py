@@ -15,13 +15,16 @@ import numpy as np
 
 from _hypothesis_compat import given, settings, st
 
+from repro.core import binarization as B
 from repro.core import cabac_vec
+from repro.core.cabac import RangeEncoder, temporal_classes
 from repro.core.codec import (DecodeOptions, QuantizedTensor,
+                              decode_delta_chunks_batched, decode_delta_record,
                               decode_state_dict, decode_state_dict_batched,
-                              encode_level_chunks,
+                              encode_delta_chunks_batched, encode_level_chunks,
                               encode_level_chunks_batched, encode_state_dict,
                               resolve_dtype)
-from repro.core.container import ContainerWriter
+from repro.core.container import ContainerReader, ContainerWriter
 
 SHAPES = [(), (0,), (1,), (5,), (37,), (130,), (3, 4), (2, 3, 4), (16, 17)]
 DTYPES = ["float32", "float64", "float16", "bfloat16"]
@@ -139,7 +142,112 @@ def test_mixed_state_dict_roundtrip(seed):
     assert np.array_equal(out["raw_i32"], entries["raw_i32"])
 
 
+# -- temporal-context delta records (ENC_CABAC_DELTA) ------------------------
+
+def _delta_blob(resid: np.ndarray, base: np.ndarray, step: float, dtype: str,
+                num_gr: int, chunk: int) -> bytes:
+    chunks, counts = encode_delta_chunks_batched(resid, base, num_gr, chunk)
+    w = ContainerWriter()
+    w.add_cabac_delta("t", dtype, np.asarray(resid).shape, step, num_gr,
+                      chunk, chunks, counts)
+    return w.tobytes()
+
+
+@settings(max_examples=_ex(25), deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       dtype=st.sampled_from(DTYPES),
+       shape=st.sampled_from(SHAPES),
+       base_profile=st.sampled_from(PROFILES),
+       resid_profile=st.sampled_from(PROFILES),
+       chunk=st.sampled_from(CHUNKS),
+       num_gr=st.sampled_from([1, 10]),
+       backend=st.sampled_from(["auto", "numpy", "scalar"]))
+def test_delta_record_roundtrip_any_backend(seed, dtype, shape, base_profile,
+                                            resid_profile, chunk, num_gr,
+                                            backend):
+    # the base picks the context classes, the residual is the coded signal —
+    # fuzz both independently so every (class, magnitude) pairing shows up
+    base = _levels(shape, base_profile, seed).ravel()
+    resid = _levels(shape, resid_profile, seed + 1)
+    blob = _delta_blob(resid, base, 0.5, dtype, num_gr, chunk)
+    hdr, payload = next(iter(ContainerReader(blob)))
+    out = decode_delta_record(hdr, bytes(payload), base, dequantize=False,
+                              opts=DecodeOptions(backend=backend))
+    assert np.array_equal(out.levels, base.reshape(shape) + resid)
+    assert out.step == 0.5 and out.dtype == dtype
+
+
+@settings(max_examples=_ex(15), deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       k=st.integers(1, 4),
+       chunk=st.sampled_from(CHUNKS),
+       backend=st.sampled_from(["auto", "numpy", "scalar"]))
+def test_chained_deltas_bit_identical_to_direct_levels(seed, k, chunk,
+                                                       backend):
+    # base + k chained P-frames must reconstruct the last frame's integer
+    # levels exactly (zero drift) — the property the checkpoint chain
+    # restore relies on
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 300))
+    frames = [(rng.standard_t(2, n) * 5).astype(np.int64)]
+    for _ in range(k):
+        frames.append(frames[-1] + rng.integers(-3, 4, n).astype(np.int64))
+    cur = frames[0]
+    opts = DecodeOptions(backend=backend)
+    for prev, new in zip(frames, frames[1:]):
+        blob = _delta_blob(new - prev, prev, 0.25, "float32", 10, chunk)
+        hdr, payload = next(iter(ContainerReader(blob)))
+        cur = decode_delta_record(hdr, bytes(payload), cur, dequantize=False,
+                                  opts=opts).levels.ravel()
+    assert np.array_equal(cur, frames[-1])
+
+
+@settings(max_examples=_ex(15), deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       chunk=st.sampled_from(CHUNKS),
+       num_gr=st.sampled_from([1, 10]),
+       backend=st.sampled_from(["numpy", "auto"]))
+def test_delta_encode_backends_byte_equal(seed, chunk, num_gr, backend):
+    rng = np.random.default_rng(seed)
+    base = (rng.standard_t(2, 257) * 5).astype(np.int64)
+    resid = rng.integers(-5, 6, 257).astype(np.int64)
+    got = encode_delta_chunks_batched(resid, base, num_gr, chunk,
+                                      backend=backend)[0]
+    # scalar reference coder, chunk by chunk
+    cls = temporal_classes(base)
+    want = []
+    for s in range(0, 257, chunk):
+        enc = RangeEncoder(B.make_contexts_tc(num_gr))
+        B.encode_levels_tc(enc, resid[s:s + chunk], cls[s:s + chunk], num_gr)
+        want.append(enc.finish())
+    assert got == want
+
+
 # -- deterministic pins (run with or without hypothesis) ---------------------
+
+def test_delta_empty_and_scalar_shapes_roundtrip():
+    for shape in [(), (0,), (1,)]:
+        base = np.zeros(shape, dtype=np.int64).ravel()
+        resid = np.zeros(shape, dtype=np.int64)
+        blob = _delta_blob(resid, base, 0.5, "float32", 10, 16)
+        hdr, payload = next(iter(ContainerReader(blob)))
+        out = decode_delta_record(hdr, bytes(payload), base,
+                                  dequantize=False)
+        assert out.levels.shape == shape
+        assert np.array_equal(out.levels, np.zeros(shape, dtype=np.int64))
+
+
+def test_wide_delta_residuals_fall_back_to_scalar_tc_decoder():
+    # residuals past the lane limit must still decode via the OverflowError
+    # -> scalar fallback, mirroring the intra v3 contract
+    base = np.array([0, 3, 40], dtype=np.int64)
+    resid = np.array([1 << 62, -(1 << 62), 7], dtype=np.int64)
+    cls = temporal_classes(base)
+    enc = RangeEncoder(B.make_contexts_tc(10))
+    B.encode_levels_tc(enc, resid, cls, 10)
+    out = decode_delta_chunks_batched([enc.finish()], [3], base, 10,
+                                      DecodeOptions(backend="auto"))
+    assert np.array_equal(out, resid)
 
 def test_scalar_path_survives_int64_extremes():
     lv = np.array([np.iinfo(np.int64).max, 0, np.iinfo(np.int64).min + 1],

@@ -2,23 +2,25 @@
 
 Compat matrix under test (writer version x reader generation):
 
-    writer \\ reader | v1-era | v2-era | v3-era
-    v1 (raw+cabac)   |  reads |  reads |  reads
-    v2 (+huff, q8)   | reject |  reads |  reads
-    v3 (+lane cabac) | reject | reject |  reads
+    writer \\ reader | v1-era | v2-era | v3-era | v4-era
+    v1 (raw+cabac)   |  reads |  reads |  reads |  reads
+    v2 (+huff, q8)   | reject |  reads |  reads |  reads
+    v3 (+lane cabac) | reject | reject |  reads |  reads
+    v4 (+delta)      | reject | reject | reject |  reads
 
 Older reader generations are emulated with ``max_version`` — the version
-gate is the same code path a pre-v3 checkout runs.
+gate is the same code path a pre-v4 checkout runs.
 """
 
 import numpy as np
 import pytest
 
 from repro.core.codec import (QuantizedTensor, decode_state_dict,
+                              encode_delta_chunks_batched,
                               encode_level_chunks,
                               encode_level_chunks_batched, encode_state_dict)
 from repro.core.container import (HEADER_LEN, MAGIC, VERSION, VERSION_V2,
-                                  VERSION_V3, ContainerReader,
+                                  VERSION_V3, VERSION_V4, ContainerReader,
                                   ContainerWriter, read_record_at)
 
 
@@ -43,10 +45,20 @@ def _v3_blob() -> bytes:
     return w.tobytes()
 
 
+def _v4_blob() -> bytes:
+    base = (np.arange(90, dtype=np.int64) % 11) - 5
+    resid = (np.arange(90, dtype=np.int64) % 3) - 1
+    chunks, counts = encode_delta_chunks_batched(resid, base, 10, 32)
+    w = ContainerWriter()
+    w.add_cabac_delta("w", "float32", (90,), 0.25, 10, 32, chunks, counts)
+    return w.tobytes()
+
+
 def test_writer_emits_lowest_sufficient_version():
     assert ContainerReader(_v1_blob()).version == VERSION
     assert ContainerReader(_v2_blob()).version == VERSION_V2
     assert ContainerReader(_v3_blob()).version == VERSION_V3
+    assert ContainerReader(_v4_blob()).version == VERSION_V4
 
 
 @pytest.mark.parametrize("max_version", [VERSION, VERSION_V2, VERSION_V3])
@@ -58,7 +70,8 @@ def test_every_reader_generation_reads_v1(max_version):
 
 def test_older_readers_reject_newer_blobs_with_versioned_error():
     cases = [(_v2_blob(), VERSION, 2), (_v3_blob(), VERSION, 3),
-             (_v3_blob(), VERSION_V2, 3)]
+             (_v3_blob(), VERSION_V2, 3), (_v4_blob(), VERSION, 4),
+             (_v4_blob(), VERSION_V2, 4), (_v4_blob(), VERSION_V3, 4)]
     for blob, max_version, written in cases:
         with pytest.raises(ValueError, match=f"version {written}"):
             ContainerReader(blob, max_version=max_version)
@@ -78,6 +91,12 @@ def test_v3_chunk_streams_byte_identical_to_v1():
     v3, counts = encode_level_chunks_batched(lv, 10, 64)
     assert v1 == v3
     assert counts == [64, 64, 64, 8]
+
+
+def test_every_current_reader_generation_reads_v4():
+    r = ContainerReader(_v4_blob(), max_version=VERSION_V4)
+    names = [hdr.name for hdr, _ in r]
+    assert names == ["w"]
 
 
 # -- reader error paths ------------------------------------------------------

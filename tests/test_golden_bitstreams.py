@@ -1,4 +1,4 @@
-"""Golden-bitstream pins for the DCBC wire format (v1 / v2 / v3).
+"""Golden-bitstream pins for the DCBC wire format (v1 / v2 / v3 / v4).
 
 Encoding must stay byte-exact against the committed fixtures and every
 fixture must decode to exactly the values its generator quantized — any
@@ -12,10 +12,11 @@ import os
 import numpy as np
 import pytest
 
-from repro.core.codec import (DecodeOptions, decode_state_dict,
+from repro.core.codec import (DecodeOptions, decode_delta_record,
+                              decode_record, decode_state_dict,
                               decode_state_dict_batched, resolve_dtype)
-from repro.core.container import (VERSION, VERSION_V2, VERSION_V3,
-                                  ContainerReader)
+from repro.core.container import (ENC_CABAC_DELTA, VERSION, VERSION_V2,
+                                  VERSION_V3, VERSION_V4, ContainerReader)
 
 _spec = importlib.util.spec_from_file_location(
     "gen_goldens",
@@ -36,6 +37,7 @@ def test_golden_versions():
     assert ContainerReader(gg.load_fixture("v1_basic")).version == VERSION
     assert ContainerReader(gg.load_fixture("v2_mixed")).version == VERSION_V2
     assert ContainerReader(gg.load_fixture("v3_lanes")).version == VERSION_V3
+    assert ContainerReader(gg.load_fixture("v4_delta")).version == VERSION_V4
 
 
 def test_v1_golden_decodes_exactly():
@@ -76,6 +78,37 @@ def test_v3_golden_decodes_exactly_on_every_path(path):
     assert out["raw"].dtype == resolve_dtype("float32")
     assert np.array_equal(out["raw"].ravel(),
                           np.arange(6, dtype=np.float32) / 8)
+
+
+@pytest.mark.parametrize("backend", ["auto", "numpy", "scalar"])
+def test_v4_golden_decodes_exactly_on_every_path(backend):
+    base, resid, intra = gg.v4_parts()
+    opts = DecodeOptions(backend=backend)
+    out = {}
+    for hdr, payload in ContainerReader(gg.load_fixture("v4_delta")):
+        if hdr.encoding == ENC_CABAC_DELTA:
+            out[hdr.name] = decode_delta_record(hdr, bytes(payload), base,
+                                                dequantize=False, opts=opts)
+        else:
+            out[hdr.name] = decode_record(hdr, bytes(payload),
+                                          dequantize=False, opts=opts)
+    assert np.array_equal(out["delta"].levels.ravel(), base + resid)
+    assert out["delta"].step == 0.125
+    assert out["delta"].shape == (20, 15)
+    assert np.array_equal(out["intra"].levels, intra)
+    assert out["intra"].dtype == "bfloat16"
+
+
+def test_v4_delta_record_rejects_standalone_decode():
+    # residuals are meaningless without the base frame; the stream decoder
+    # must say so instead of emitting garbage levels
+    blob = gg.load_fixture("v4_delta")
+    with pytest.raises(ValueError, match="cannot be decoded standalone"):
+        decode_state_dict(blob, dequantize=False)
+    hdr, payload = next(iter(ContainerReader(blob)))
+    base, _, _ = gg.v4_parts()
+    with pytest.raises(ValueError, match="against a base of"):
+        decode_delta_record(hdr, bytes(payload), base[:-1], dequantize=False)
 
 
 def test_v3_reader_reads_v1_and_v2_unchanged():

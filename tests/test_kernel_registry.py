@@ -156,23 +156,22 @@ def test_embed_lookup_q8_matches_previous_behavior():
     t2 = jnp.asarray([[0, 3]], jnp.int32)
     np.testing.assert_array_equal(np.asarray(op(table, t2, jnp.float32)),
                                   np.asarray(jnp.take(table, t2, axis=0)))
-    # deprecated import path still works
-    from repro.serve.quantized import embed_lookup_q8 as legacy
-    np.testing.assert_array_equal(
-        np.asarray(legacy(leaf, toks, jnp.float32)), got)
 
 
-def test_legacy_config_fields_fold_into_policy():
+def test_legacy_config_fields_removed():
+    """The PR-3 deprecation shims are gone: per-op pins go through
+    KernelPolicy only, and the serve.quantized re-export is dropped."""
     from repro.configs import get_smoke_config
+    import repro.serve.quantized as sq
     cfg = get_smoke_config("llama3-8b")
-    assert cfg.kernels.impl_for("flash_attention") is None
-    with pytest.warns(DeprecationWarning):
-        cfg2 = cfg.replace(attn_impl="naive", q8_matmul_impl="interpret")
+    with pytest.raises(TypeError):
+        cfg.replace(attn_impl="naive")
+    with pytest.raises(TypeError):
+        cfg.replace(q8_matmul_impl="interpret")
+    assert not hasattr(sq, "embed_lookup_q8")
+    cfg2 = cfg.replace(kernels=KernelPolicy().override(
+        "flash_attention", "ref"))
     assert cfg2.kernels.impl_for("flash_attention") == "ref"
-    assert cfg2.kernels.impl_for("dequant_matmul") == "interpret"
-    with pytest.warns(DeprecationWarning):
-        cfg3 = cfg.replace(attn_impl="pallas_flash")
-    assert cfg3.kernels.impl_for("flash_attention") == "pallas"
 
 
 def test_dispatch_report_records_default_fallback():
@@ -235,14 +234,17 @@ def test_decode_routes_to_scan_without_fallback_record():
             if r["op"] == "flash_attention"] == []
 
 
-def test_legacy_fields_clear_after_folding():
-    """replace() must not re-fold stale legacy strings over an explicitly
-    updated kernels policy (review regression)."""
-    from repro.configs import get_smoke_config
-    with pytest.warns(DeprecationWarning):
-        cfg = get_smoke_config("llama3-8b").replace(attn_impl="scan")
-    assert cfg.attn_impl is None            # folded, then cleared
-    assert cfg.kernels.impl_for("flash_attention") == "scan"
-    cfg2 = cfg.replace(kernels=cfg.kernels.override(
-        "flash_attention", "pallas"))       # no warning, pin sticks
-    assert cfg2.kernels.impl_for("flash_attention") == "pallas"
+def test_attend_impl_aliases_map_to_registry():
+    """attend(impl=...) keeps its historical vocabulary, mapped onto
+    registry impl names (the ModelConfig string fields are gone)."""
+    from repro.models.attention import attend
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.standard_normal((1, 8, 2, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 8, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 8, 2, 16)), jnp.float32)
+    qpos = jnp.broadcast_to(jnp.arange(8), (1, 8))
+    naive = np.asarray(attend(q, k, v, qpos, impl="naive"))
+    scan = np.asarray(attend(q, k, v, qpos, impl="scan"))
+    np.testing.assert_allclose(naive, scan, atol=2e-5, rtol=2e-5)
+    with pytest.raises(ValueError, match="unknown attention impl"):
+        attend(q, k, v, qpos, impl="bogus")

@@ -200,7 +200,7 @@ def test_manifest_version_gate(tmp_path):
     d = _step_dir(shard)
     mpath = os.path.join(d, sharded.MANIFEST_NAME)
     manifest = json.load(open(mpath))
-    manifest["manifest_version"] = sharded.MANIFEST_VERSION + 1
+    manifest["manifest_version"] = sharded.MANIFEST_MAX_VERSION + 1
     json.dump(manifest, open(mpath, "w"))
     with pytest.raises(ValueError, match="manifest version"):
         sharded.load_manifest(d)
