@@ -17,6 +17,10 @@ headline throughput/latency numbers of each bench:
   <= 0.35x the full re-encode and temporal-context CABAC strictly below
   intra coding of the same residuals) and live-swap ``swap_s``
   (lower better)
+* ``BENCH_kv_paging.json``     — paged-KV ``sessions_per_gib_ratio``
+  (higher better; hard invariants pin it >= 3x slot mode and require
+  ``tokens_match`` — the paged run stays token-identical through forced
+  eviction/restore) and ``restore_ms_mean`` (lower better)
 
 Escape hatch: a commit whose message contains ``[bench-skip]`` passes the
 gate with a notice (pass the message via ``--commit-message`` — CI hands
@@ -38,7 +42,8 @@ import os
 import sys
 
 BENCH_FILES = ("BENCH_serve.json", "BENCH_cold_start.json",
-               "BENCH_shard_restore.json", "BENCH_delta.json")
+               "BENCH_shard_restore.json", "BENCH_delta.json",
+               "BENCH_kv_paging.json")
 
 
 def _load(path: str) -> dict | None:
@@ -77,6 +82,14 @@ def smoke_metrics(fname: str, report: dict) -> dict[str, tuple[float, bool]]:
                     float(r["tc_vs_intra"]), False)
             elif r["path"] == "swap":
                 out["delta/swap/swap_s"] = (float(r["swap_s"]), False)
+    elif fname == "BENCH_kv_paging.json":
+        for r in rows:
+            if r["path"] == "capacity":
+                out["kv_paging/capacity/sessions_per_gib_ratio"] = (
+                    float(r["sessions_per_gib_ratio"]), True)
+            elif r["path"] == "evict_restore" and r["pages_restored"]:
+                out["kv_paging/evict_restore/restore_ms_mean"] = (
+                    float(r["restore_ms_mean"]), False)
     return out
 
 
@@ -107,6 +120,21 @@ def check_invariants(fname: str, report: dict) -> list[str]:
                     f"p_frame: temporal-context CABAC ({r['tc_bytes']} B) "
                     f"did not beat intra coding of the same residuals "
                     f"({r['intra_bytes']} B)")
+    elif fname == "BENCH_kv_paging.json":
+        for r in report.get("rows", []):
+            if r["path"] != "capacity":
+                continue
+            if not r["tokens_match"]:
+                errors.append(
+                    "kv_paging: paged session diverged from slot mode — "
+                    "compressed eviction must stay token-identical on "
+                    "int8 caches")
+            if r["sessions_per_gib_ratio"] < 3.0:
+                errors.append(
+                    f"kv_paging: {r['sessions_per_gib_ratio']:.2f}x "
+                    f"sessions/GiB vs slot mode — the paged cache must "
+                    f"sustain >= 3x concurrent long-context sessions per "
+                    f"GiB of device KV")
     return errors
 
 

@@ -1,0 +1,155 @@
+"""Paged-KV serving benchmark: concurrent long-context sessions per GiB.
+
+Pins down what the entropy-coded paged cache (``repro.serve.kv``) buys
+over the monolithic slot cache on the smoke config:
+
+* **capacity** — how many concurrent long-context sessions one GiB of
+  *device* KV sustains.  Slot mode must preallocate ``max_len`` for every
+  slot; paged mode holds only each request's written pages hot and parks
+  the overflow compressed on host, so the same device budget admits a
+  multiple (the ``sessions_per_gib_ratio`` headline — the acceptance bar
+  is >= 3x).
+* **correctness under pressure** — the paged run uses a pool much
+  smaller than ``slots x max_len``, forcing compressed eviction and
+  restore mid-generation; its greedy tokens must equal the slot-mode
+  run's (``tokens_match``).
+* **eviction codec** — compression ratio of evicted pages and the
+  restore latency through the lane-parallel batched decoder.
+
+Writes ``BENCH_kv_paging.json`` for the CI regression gate
+(``benchmarks/check_regression.py``).  Numbers are host-CPU smoke-scale:
+regression tracking, not roofline claims.
+
+Run: PYTHONPATH=src python -m benchmarks.kv_paging_bench [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+GIB = 1 << 30
+
+
+def _workload(cfg, requests: int, prompt_len: int, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+            for _ in range(requests)]
+
+
+def _run(cfg, params, prompts, serve_cfg, steps: int):
+    from repro.serve.session import ServeSession
+    session = ServeSession(cfg, params, serve_cfg=serve_cfg)
+    t0 = time.time()
+    handles = [session.submit(p, max_new_tokens=steps) for p in prompts]
+    session.run(max_steps=20000)
+    wall = time.time() - t0
+    assert all(h.done for h in handles), "workload did not finish"
+    outs = [list(map(int, h.result())) for h in handles]
+    report = session.kv_report()
+    session.close()
+    return outs, wall, report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="BENCH_kv_paging.json")
+    args, _ = ap.parse_known_args()
+
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import init_params
+    from repro.serve.kv import kv_cache_bytes
+    from repro.serve.session import ServeConfig
+
+    # int8 cache: the eviction codec is lossless on the cache levels, so
+    # the paged run must be token-identical to slot mode
+    cfg = get_smoke_config("llama3-8b").replace(q8_cache=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    max_len = 128 if args.fast else 256
+    steps = 12 if args.fast else 24
+    requests = 6 if args.fast else 8
+    slots = requests
+    page = 8
+    prompt_len = max_len // 4
+    prompts = _workload(cfg, requests, prompt_len)
+
+    # -- slot mode: device KV is slots x max_len, always resident --------
+    slot_cfg = ServeConfig(slots=slots, max_len=max_len)
+    ref_out, slot_wall, slot_rep = _run(cfg, params, prompts, slot_cfg,
+                                        steps)
+
+    # -- paged mode: hot pool at a quarter of slot mode's device budget —
+    # smaller than the workload's working set, so sessions time-share the
+    # pool and the overflow lives entropy-coded on host -------------------
+    n_max = -(-max_len // page)
+    pool_pages = slots * n_max // 4 + 1
+    paged_cfg = ServeConfig(slots=slots, max_len=max_len, kv_page_size=page,
+                            kv_pool_pages=pool_pages, kv_restore_workers=1)
+    paged_out, paged_wall, paged_rep = _run(cfg, params, prompts, paged_cfg,
+                                            steps)
+
+    tokens_match = paged_out == ref_out
+    sched = paged_rep["scheduler"]
+    kv_stats = paged_rep["stats"]
+
+    # sessions per GiB of *device* KV, both modes driving the identical
+    # concurrent workload to completion.  One source of truth for the
+    # per-session device cost: kv_cache_bytes / the pool's real nbytes.
+    bytes_per_slot = kv_cache_bytes(cfg, 1, max_len)
+    slot_sessions_per_gib = requests / (slots * bytes_per_slot / GIB)
+    paged_sessions_per_gib = requests / (paged_rep["device_bytes"] / GIB)
+    ratio = paged_sessions_per_gib / slot_sessions_per_gib
+
+    restore_ms = (1e3 * kv_stats["restore_s"] / max(kv_stats["restores"], 1))
+    evict_ratio = (kv_stats["bytes_to_host"]
+                   / max(kv_stats["pages_evicted"]
+                         * paged_rep["page_bytes"], 1))
+
+    rows = [{
+        "path": "capacity",
+        "requests": requests, "max_len": max_len, "steps": steps,
+        "page_size": page, "pool_pages": pool_pages,
+        "bytes_per_slot": bytes_per_slot,
+        "slot_device_bytes": slots * bytes_per_slot,
+        "paged_device_bytes": paged_rep["device_bytes"],
+        "slot_sessions_per_gib": round(slot_sessions_per_gib, 1),
+        "paged_sessions_per_gib": round(paged_sessions_per_gib, 1),
+        "sessions_per_gib_ratio": round(ratio, 2),
+        "tokens_match": tokens_match,
+        "slot_wall_s": round(slot_wall, 3),
+        "paged_wall_s": round(paged_wall, 3),
+    }, {
+        "path": "evict_restore",
+        "parks": sched["parks"], "resumes": sched["resumes"],
+        "pages_evicted": kv_stats["pages_evicted"],
+        "pages_restored": kv_stats["pages_restored"],
+        "bytes_to_host": kv_stats["bytes_to_host"],
+        "evicted_compression_ratio": round(evict_ratio, 4),
+        "restore_ms_mean": round(restore_ms, 3),
+        "prefix_hits": kv_stats["prefix_hits"],
+        "free_slot_rows": sched["free_slot_rows"],
+        "padded_rows": sched["padded_rows"],
+    }]
+    report = {"bench": "kv_paging", "arch": cfg.name,
+              "fast": bool(args.fast), "rows": rows}
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    for r in rows:
+        print(f"kv_paging/{r['path']},{json.dumps(r, default=float)}",
+              flush=True)
+    print(f"wrote {args.out}")
+    if not tokens_match:
+        raise SystemExit("paged tokens diverged from slot mode")
+    if ratio < 3.0:
+        raise SystemExit(
+            f"sessions_per_gib_ratio {ratio:.2f} < 3.0 acceptance bar")
+
+
+if __name__ == "__main__":
+    main()

@@ -38,6 +38,7 @@ _LAZY = {
     "CabacV3Coder": "coders",
     "HuffmanCoder": "coders",
     "RawLevelCoder": "coders",
+    "KVPageCodec": "kv_pages",
     "Quantizer": "quantizers",
     "RDGridQuantizer": "quantizers",
     "NearestStdQuantizer": "quantizers",

@@ -1,0 +1,117 @@
+"""KV-page codec: the paper's quantize -> CABAC stack pointed at KV pages.
+
+``KVPageCodec`` (registered as ``kv-q8-cabac``) turns a pytree of gathered
+KV-cache pages into one v3-chunked DCBC container and back.  It is the
+eviction format of the paged serving cache (``repro.serve.kv``): cold
+pages are entropy-coded to host, and re-admission decodes every chunk of
+every record through ``decode_level_chunks_batched`` — the lane-parallel
+engine — so restores are scheduled exactly like container cold starts.
+
+Two leaf encodings, chosen by the page's storage dtype:
+
+* int8 pages (``cfg.q8_cache=True`` — levels on the ``kv_cache_delta``
+  grid) are coded **losslessly**: the int8 levels go straight through
+  CABAC, so an evict/restore round trip is bit-exact and a paged session
+  stays token-identical to an unpaged one.
+* float pages (bf16/f32 caches) are q8 block-quantized first
+  (``compression.q8``, per-128-block absmax scales): the codes are
+  CABAC-coded and the f32 scales ride along as a raw ``<name>#scale``
+  record.  This path is lossy (the restore is the q8 reconstruction), and
+  the q8 *levels* themselves round-trip bit-exactly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import binarization as B
+from ..core.codec import (DecodeOptions, decode_record,
+                          encode_level_chunks_batched, resolve_dtype)
+from ..core.container import ContainerReader, ContainerWriter
+from .artifact import Artifact
+from .q8 import q8_decode, q8_encode
+from .tree import flatten_tree, unflatten_like
+
+# Flat page names join key paths with "/", so "#" cannot collide.
+SCALE_SUFFIX = "#scale"
+
+# Pages are small (a few hundred KiB); smaller chunks than the weight
+# codecs' DEFAULT_CHUNK keep enough lanes in flight per record.
+KV_PAGE_CHUNK = 1 << 14
+
+
+@dataclass
+class KVPageCodec:
+    """Compress/decompress a pytree of KV pages (see module docstring).
+
+    ``step`` records the int8 cache's ``kv_cache_delta`` in each header —
+    informational for int8 pages (decode returns the levels; the model
+    dequantizes in-kernel), unused for float pages.
+    """
+
+    step: float = 1.0
+    num_gr: int = B.DEFAULT_NUM_GR
+    chunk_size: int = KV_PAGE_CHUNK
+    backend: str = "auto"
+    name: str = "kv-q8-cabac"
+
+    def compress(self, pages) -> Artifact:
+        flat = flatten_tree(pages)
+        writer = ContainerWriter()
+        raw_bytes = 0
+        for tname, arr in flat.items():
+            arr = np.asarray(arr)
+            raw_bytes += int(arr.nbytes)
+            if arr.dtype == np.int8:
+                codes = arr
+            else:
+                codes, scale = q8_encode(jnp.asarray(arr))
+                codes = np.asarray(codes)
+                writer.add_raw(tname + SCALE_SUFFIX,
+                               np.asarray(scale, np.float32))
+            chunks, counts = encode_level_chunks_batched(
+                codes.astype(np.int64), self.num_gr, self.chunk_size,
+                self.backend)
+            writer.add_cabac_v3(tname, str(arr.dtype), arr.shape, self.step,
+                                self.num_gr, self.chunk_size, chunks, counts)
+        blob = writer.tobytes()
+        report = {"tensors": len(flat), "raw_bytes": raw_bytes,
+                  "compressed_bytes": len(blob),
+                  "ratio": len(blob) / max(raw_bytes, 1)}
+        return Artifact(blob=blob, report=report,
+                        hyperparams={"codec": self.name, "step": self.step,
+                                     "num_gr": self.num_gr,
+                                     "chunk_size": self.chunk_size})
+
+    def decompress(self, blob: bytes, like=None,
+                   opts: DecodeOptions | None = None):
+        """blob -> flat ``{name: ndarray}`` (or ``like``'s structure).
+
+        int8 records come back as the stored int8 levels; float records as
+        the q8 reconstruction in their original dtype.  All CABAC chunks
+        decode through the lane engine selected by ``opts``.
+        """
+        opts = opts or DecodeOptions()
+        tensors: dict[str, object] = {}
+        scales: dict[str, np.ndarray] = {}
+        for hdr, payload in ContainerReader(blob):
+            rec = decode_record(hdr, payload, dequantize=False, opts=opts)
+            if hdr.name.endswith(SCALE_SUFFIX):
+                scales[hdr.name[:-len(SCALE_SUFFIX)]] = rec
+            else:
+                tensors[hdr.name] = rec
+        out: dict[str, np.ndarray] = {}
+        for tname, qt in tensors.items():
+            codes = qt.levels.astype(np.int8)
+            if tname in scales:
+                dec = q8_decode(jnp.asarray(codes),
+                                jnp.asarray(scales[tname]))
+                out[tname] = np.asarray(dec).astype(resolve_dtype(qt.dtype))
+            else:
+                out[tname] = codes
+        if like is not None:
+            return unflatten_like(out, like)
+        return out

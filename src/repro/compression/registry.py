@@ -162,6 +162,23 @@ def _raw() -> Codec:
     return Codec("raw")
 
 
+def _kv_q8_cabac(step: float = 1.0, num_gr: int = B.DEFAULT_NUM_GR,
+                 chunk_size: int | None = None, backend: str = "auto"):
+    """KV-cache page codec (the paged serving cache's eviction format):
+    int8 cache pages CABAC-coded losslessly, float pages q8
+    block-quantized first (``compression.q8``) with raw f32 scale
+    records.  Restores batch every chunk through the lane-parallel
+    decoder.  Not a tree-policy :class:`Codec` — pages are dense
+    activation tiles, so the quantizer x policy machinery for weight
+    trees doesn't apply; the object exposes the same
+    ``compress``/``decompress`` surface.  See
+    :mod:`repro.compression.kv_pages`."""
+    from .kv_pages import KV_PAGE_CHUNK, KVPageCodec
+    return KVPageCodec(step=step, num_gr=num_gr,
+                       chunk_size=KV_PAGE_CHUNK if chunk_size is None
+                       else chunk_size, backend=backend)
+
+
 register("deepcabac-v2", _deepcabac_v2)
 register("deepcabac-delta", _deepcabac_delta)
 register("deepcabac-v3", _deepcabac_v3)
@@ -169,3 +186,4 @@ register("ckpt-nearest", _ckpt_nearest)
 register("serve-q8", _serve_q8)
 register("huffman", _huffman)
 register("raw", _raw)
+register("kv-q8-cabac", _kv_q8_cabac)

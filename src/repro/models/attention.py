@@ -49,6 +49,36 @@ def _cache_update(cache_arr, new_vals, cache_pos, delta):
     b = cache_arr.shape[0]
     return cache_arr.at[jnp.arange(b), cp].set(vals[:, 0])
 
+
+def _paged_update_load(pool, new_vals, cache_pos, cache_pages, delta, dtype):
+    """Paged decode: write one token into the page pool, read the batch's
+    logical views back.
+
+    pool (P, page, ...) is the shared hot-page pool (layer axis already
+    consumed by the scan); cache_pages (B, n_max) int32 maps each row's
+    logical page index to a pool page id.  Row ``i``'s new K/V lands in
+    page ``cache_pages[i, pos // page]`` at offset ``pos % page``; the
+    gathered view ``pool[cache_pages]`` reshapes to the row's contiguous
+    (B, n_max*page, ...) cache.  Pool page 0 is the scheduler's scratch
+    page: padding rows point every logical page at it, so their writes
+    collide harmlessly there and never touch a live page.
+
+    Returns (updated pool, per-row contiguous values in ``dtype``).
+    """
+    b = cache_pages.shape[0]
+    assert new_vals.shape[1] == 1, "paged cache update is decode-only (S=1)"
+    page_len = pool.shape[1]
+    cp = jnp.asarray(cache_pos, jnp.int32)
+    if cp.ndim == 0:
+        cp = jnp.broadcast_to(cp, (b,))
+    pid = jnp.take_along_axis(cache_pages, (cp // page_len)[:, None],
+                              axis=1)[:, 0]
+    pool = pool.at[pid, cp % page_len].set(
+        _cache_store(new_vals, pool, delta)[:, 0])
+    view = jnp.take(pool, cache_pages, axis=0)       # (B, n_max, page, ...)
+    view = view.reshape(b, view.shape[1] * page_len, *view.shape[3:])
+    return pool, _cache_load(view, dtype, delta)
+
 # attend(impl=...) values -> registry impl names (the historical attend
 # vocabulary predates the kernel registry, so "naive"/"pallas_flash"
 # alias the registry's "ref"/"pallas")
@@ -87,13 +117,17 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def gqa_attention(x, p, cfg, positions, *, cache=None, cache_pos=None,
-                  positions_3d=None):
+                  positions_3d=None, cache_pages=None):
     """x (B,S,d).  Returns (out (B,S,d), new_cache | None).
 
     Prefill/train: cache None (train) or dict to fill (prefill).
     Decode: S == 1, cache holds (B, Smax, G, D); cache_pos is a scalar
     (whole batch at one offset) or a (B,) int32 vector of per-row offsets
     (ragged continuous batching — see _cache_update).
+    Paged decode: cache leaves are page *pools* (P, page, G, D) and
+    cache_pages (B, n_max) int32 maps logical page index -> pool page id
+    (see _paged_update_load; the serving page table lives in
+    ``repro.serve.kv``).
     """
     b, s, _ = x.shape
     h, g, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -118,7 +152,15 @@ def gqa_attention(x, p, cfg, positions, *, cache=None, cache_pos=None,
     new_cache = None
     kv_len = None
     delta = cfg.kv_cache_delta
-    if cache is not None and cache_pos is not None:        # decode step
+    if cache is not None and cache_pages is not None:      # paged decode
+        ck, k = _paged_update_load(cache["k"], k, cache_pos, cache_pages,
+                                   delta, q.dtype)
+        cv, v = _paged_update_load(cache["v"], v, cache_pos, cache_pages,
+                                   delta, q.dtype)
+        new_cache = {"k": ck, "v": cv}
+        kv_len = jnp.broadcast_to(
+            jnp.asarray(cache_pos, jnp.int32) + s, (b,))
+    elif cache is not None and cache_pos is not None:      # decode step
         ck = _cache_update(cache["k"], k, cache_pos, delta)
         cv = _cache_update(cache["v"], v, cache_pos, delta)
         new_cache = {"k": ck, "v": cv}
@@ -143,8 +185,12 @@ def gqa_attention(x, p, cfg, positions, *, cache=None, cache_pos=None,
 # MLA (DeepSeek-V3 multi-head latent attention)
 # ---------------------------------------------------------------------------
 
-def mla_attention(x, p, cfg, positions, *, cache=None, cache_pos=None):
-    """Latent-cache attention: the KV cache stores only (c_kv, k_rope)."""
+def mla_attention(x, p, cfg, positions, *, cache=None, cache_pos=None,
+                  cache_pages=None):
+    """Latent-cache attention: the KV cache stores only (c_kv, k_rope).
+
+    ``cache_pages`` selects the paged-decode path exactly as in
+    :func:`gqa_attention` — the pools are (P, page, R) latent pages."""
     b, s, _ = x.shape
     h = cfg.num_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -167,7 +213,15 @@ def mla_attention(x, p, cfg, positions, *, cache=None, cache_pos=None):
     new_cache = None
     kv_len = None
     delta = cfg.kv_cache_delta
-    if cache is not None and cache_pos is not None:        # decode
+    if cache is not None and cache_pages is not None:      # paged decode
+        ckv_all, ckv = _paged_update_load(cache["ckv"], ckv, cache_pos,
+                                          cache_pages, delta, x.dtype)
+        kr_all, kr = _paged_update_load(cache["kr"], kr, cache_pos,
+                                        cache_pages, delta, x.dtype)
+        new_cache = {"ckv": ckv_all, "kr": kr_all}
+        kv_len = jnp.broadcast_to(
+            jnp.asarray(cache_pos, jnp.int32) + s, (b,))
+    elif cache is not None and cache_pos is not None:      # decode
         ckv_all = _cache_update(cache["ckv"], ckv, cache_pos, delta)
         kr_all = _cache_update(cache["kr"], kr, cache_pos, delta)
         new_cache = {"ckv": ckv_all, "kr": kr_all}

@@ -215,33 +215,40 @@ def init_params(cfg: ModelConfig, key) -> dict:
 # Blocks
 # ---------------------------------------------------------------------------
 
-def _attn_dispatch(x, lp, cfg, positions, pos3d, cache, cache_pos):
+def _attn_dispatch(x, lp, cfg, positions, pos3d, cache, cache_pos,
+                   cache_pages=None):
     if cfg.attention == "mla":
         return mla_attention(x, lp, cfg, positions, cache=cache,
-                             cache_pos=cache_pos)
+                             cache_pos=cache_pos, cache_pages=cache_pages)
     return gqa_attention(x, lp, cfg, positions, cache=cache,
-                         cache_pos=cache_pos, positions_3d=pos3d)
+                         cache_pos=cache_pos, positions_3d=pos3d,
+                         cache_pages=cache_pages)
 
 
-def _dense_block(x, lp, cfg, positions, pos3d, cache, cache_pos):
+def _dense_block(x, lp, cfg, positions, pos3d, cache, cache_pos,
+                 cache_pages=None):
     a, new_cache = _attn_dispatch(_norm(x, lp["attn_norm"], cfg), lp["attn"],
-                                  cfg, positions, pos3d, cache, cache_pos)
+                                  cfg, positions, pos3d, cache, cache_pos,
+                                  cache_pages)
     x = constrain(x + a, "batch", "seq", None)
     x = x + swiglu_mlp(_norm(x, lp["mlp_norm"], cfg), lp["mlp"], cfg.act)
     return constrain(x, "batch", "seq", None), new_cache, \
         jnp.zeros((), jnp.float32)
 
 
-def _moe_layer_block(x, lp, cfg, positions, pos3d, cache, cache_pos):
+def _moe_layer_block(x, lp, cfg, positions, pos3d, cache, cache_pos,
+                     cache_pages=None):
     a, new_cache = _attn_dispatch(_norm(x, lp["attn_norm"], cfg), lp["attn"],
-                                  cfg, positions, pos3d, cache, cache_pos)
+                                  cfg, positions, pos3d, cache, cache_pos,
+                                  cache_pages)
     x = constrain(x + a, "batch", "seq", None)
     m, aux = moe_block(_norm(x, lp["mlp_norm"], cfg), lp["moe"], cfg)
     return constrain(x + m, "batch", "seq", None), new_cache, aux
 
 
-def _ssm_block(x, lp, cfg, positions, pos3d, cache, cache_pos):
-    del positions, pos3d, cache_pos
+def _ssm_block(x, lp, cfg, positions, pos3d, cache, cache_pos,
+               cache_pages=None):
+    del positions, pos3d, cache_pos, cache_pages
     m, new_cache = mamba2_mixer(_norm(x, lp["norm"], cfg), lp["mixer"], cfg,
                                 cache=cache)
     return constrain(x + m, "batch", "seq", None), new_cache, \
@@ -261,15 +268,19 @@ def _maybe_remat(fn, cfg):
     return fn
 
 
-def _scan_stack(x, stacked, block, cfg, positions, pos3d, caches, cache_pos):
+def _scan_stack(x, stacked, block, cfg, positions, pos3d, caches, cache_pos,
+                cache_pages=None):
     """lax.scan over stacked layer params (and per-layer caches).
 
     q8-quantized serving weights are dequantized *inside* the loop body, so
-    HBM reads of the stacked parameters stay int8 (1 B/param)."""
+    HBM reads of the stacked parameters stay int8 (1 B/param).  Under
+    paged decode the per-layer cache leaf is that layer's page *pool* and
+    ``cache_pages`` (shared across layers — one page table entry covers
+    every layer's slice of a token page) rides in the closure."""
     dt = jnp.dtype(cfg.compute_dtype)
     body = _maybe_remat(
         functools.partial(block, cfg=cfg, positions=positions, pos3d=pos3d,
-                          cache_pos=cache_pos), cfg)
+                          cache_pos=cache_pos, cache_pages=cache_pages), cfg)
 
     if caches is None:
         def f(carry, lp):
@@ -348,12 +359,18 @@ def _hybrid_scan(x, params, cfg, positions, pos3d, caches, cache_pos):
 
 def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
             positions=None, pos3d=None, caches=None, cache_pos=None,
-            last_only: bool = False, last_index=None):
+            cache_pages=None, last_only: bool = False, last_index=None):
     """Returns (logits, new_caches, aux).
 
     last_only takes position -1; last_index (B,) int32 gathers one
     per-row position instead (padded-bucket prefill) — both project the
-    head on a single position, never the full sequence."""
+    head on a single position, never the full sequence.
+
+    cache_pages (B, n_max) int32 switches attention to *paged* decode:
+    ``caches`` leaves are page pools (L, P, page, ...) and each row's KV
+    is scattered/gathered through its page-table row (``repro.serve.kv``).
+    Attention families only — an SSM/hybrid state cache has no token axis
+    to page."""
     if cfg.embed_input:
         x = _kernels.get("embed_lookup_q8")(params["embed"], tokens,
                                             jnp.dtype(cfg.compute_dtype),
@@ -376,14 +393,23 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
 
     aux = jnp.zeros((), jnp.float32)
     if cfg.family == "hybrid":
+        if cache_pages is not None:
+            raise ValueError(
+                "paged KV decode requires an attention-family cache; the "
+                f"{cfg.family!r} state cache has no token axis to page")
         x, new_caches, aux = _hybrid_scan(x, params, cfg, positions, pos3d,
                                           caches, cache_pos)
     else:
+        if cache_pages is not None and cfg.family == "ssm":
+            raise ValueError(
+                "paged KV decode requires an attention-family cache; the "
+                "'ssm' state cache has no token axis to page")
         new_caches = {}
         if cfg.family == "moe" and cfg.first_dense_layers:
             dc = None if caches is None else caches["dense"]
             x, ndc, a1 = _scan_stack(x, params["dense_layers"], _dense_block,
-                                     cfg, positions, pos3d, dc, cache_pos)
+                                     cfg, positions, pos3d, dc, cache_pos,
+                                     cache_pages)
             aux += a1
             if caches is not None:
                 new_caches["dense"] = ndc
@@ -391,7 +417,8 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
             caches["main"] if cfg.family == "moe" and cfg.first_dense_layers
             else caches)
         x, nmc, a2 = _scan_stack(x, params["layers"], _BLOCKS[cfg.family],
-                                 cfg, positions, pos3d, mc, cache_pos)
+                                 cfg, positions, pos3d, mc, cache_pos,
+                                 cache_pages)
         aux += a2
         if caches is not None:
             if cfg.family == "moe" and cfg.first_dense_layers:
@@ -505,16 +532,18 @@ def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None,
 
 
 def decode_step(params, cfg: ModelConfig, caches, pos, *, tokens=None,
-                embeds=None, pos3d=None):
+                embeds=None, pos3d=None, cache_pages=None):
     """One token step.  tokens (B,) or embeds (B,1,d).
 
     pos: scalar int32 (all rows at one offset) or (B,) int32 per-row
     offsets — the ragged continuous-batching path, where each KV-cache
     row is scattered at its own position and masked to its own length.
-    Returns (logits (B,V), new_caches)."""
+    cache_pages (B, n_max) int32 selects paged decode over page-pool
+    caches (see :func:`forward`).  Returns (logits (B,V), new_caches)."""
     if tokens is not None:
         tokens = tokens[:, None]
     logits, new_caches, _ = forward(params, cfg, tokens=tokens, embeds=embeds,
                                     pos3d=pos3d, caches=caches,
-                                    cache_pos=pos, last_only=True)
+                                    cache_pos=pos, cache_pages=cache_pages,
+                                    last_only=True)
     return logits[:, 0, :], new_caches

@@ -2,19 +2,30 @@
 
 Clients ``submit(prompt, max_new_tokens, temperature)`` and receive
 :class:`RequestHandle`\\ s; the scheduler packs active requests into a
-slot-based KV cache (admission on free slot, eviction on EOS/length) and
-runs one batched decode step per :meth:`ServeSession.step`, surfacing
-per-request token streams via ``handle.new_tokens()``.
+KV cache (admission on free slot, eviction on EOS/length) and runs one
+batched decode step per :meth:`ServeSession.step`, surfacing per-request
+token streams via ``handle.new_tokens()``.
 
-Slot model: the session preallocates ``init_cache(cfg, slots, max_len)``
-once.  A request is admitted by prefilling its prompt at batch=1 and
-scattering the resulting caches into its slot (axis 1 is the slot axis on
-every cache leaf).  Decode then advances *all* slots with per-slot ragged
-positions (``cache_pos`` as an (S,) int32 vector — see
-``models.transformer``); evicted/free slots keep computing at position 0,
-which is harmless: their writes are either overwritten by the next
-admission's prefill or masked by the per-slot ``kv_len`` until the new
-request's own decode rewrites them.
+Two cache layouts:
+
+* **Slot mode** (default): the session preallocates
+  ``init_cache(cfg, slots, max_len)`` once.  A request is admitted by
+  prefilling its prompt at batch=1 and scattering the resulting caches
+  into its slot (axis 1 is the slot axis on every cache leaf).  Decode
+  advances the *active* slots with per-slot ragged positions
+  (``cache_pos`` as an (S,) int32 vector — see ``models.transformer``);
+  free slots still occupy decode rows (their rows compute at position 0
+  and are dead by construction), counted in ``stats["free_slot_rows"]``,
+  and an all-free tick skips the decode call entirely.
+* **Paged mode** (``ServeConfig.kv_page_size``): the cache is a page
+  pool + per-slot page table (:mod:`repro.serve.kv`).  Decode batches
+  are *compacted* — only active slots are gathered (padded to a
+  power-of-two batch over the scratch page), so free slots never burn
+  decode FLOPs.  Cold pages are entropy-coded (``kv-q8-cabac``) and
+  evicted to a host cold store under pool pressure; parked requests
+  restore through the lane-parallel batched decoder on re-admission, and
+  page-aligned shared prompt prefixes prefill once
+  (copy-on-write prefix sharing).
 
 Weights come from a pluggable :mod:`backend <.backends>` (``bf16`` /
 ``q8`` / ``container``).  ``ServeEngine`` is a thin compatibility wrapper
@@ -34,6 +45,7 @@ import numpy as np
 from ..models.config import ModelConfig
 from ..models.transformer import decode_step, forward, init_cache, prefill
 from .backends import _insert, resolve_backend
+from .kv import PagedKV, kv_cache_bytes
 
 
 @dataclass(frozen=True)
@@ -53,6 +65,16 @@ class ServeConfig:
     # only: padded tail tokens are causally invisible to the prompt and
     # their stale KV is masked/overwritten, but an SSM state or MoE
     # capacity routing would see them.
+
+    # -- paged KV cache (docs/serving_api.md "Paged KV cache") ------------
+    kv_page_size: int | None = None   # tokens per page; None = slot mode
+    kv_pool_pages: int | None = None  # hot pool size; None sizes it for
+    # every slot at max_len (no eviction pressure)
+    kv_cold_store: str = "host"       # KVColdStore registry name/instance
+    kv_evict_codec: str = "kv-q8-cabac"   # compression codec for cold pages
+    kv_prefix_sharing: bool = True    # share page-aligned prompt prefixes
+    kv_restore_workers: int = 0       # >0: entropy-decode restores on a
+    # worker pool so decode latency hides behind the admission path
 
 
 @dataclass
@@ -89,9 +111,12 @@ class _Slot:
         self.pos = 0               # where next_token's KV will be written
         self.next_token = 0        # token to feed on the next decode step
 
+    def clear(self):
+        self.req, self.pos, self.next_token = None, 0, 0
+
 
 class ServeSession:
-    """Continuous-batching serving session over a slot-based KV cache."""
+    """Continuous-batching serving session over a slot or paged KV cache."""
 
     def __init__(self, cfg: ModelConfig, weights, *, backend="bf16",
                  serve_cfg: ServeConfig | None = None):
@@ -115,29 +140,59 @@ class ServeSession:
         self._slots = [_Slot() for _ in range(serve_cfg.slots)]
         self._queue: deque[RequestHandle] = deque()
         self._ids = itertools.count()
-        self._caches = init_cache(cfg, serve_cfg.slots, serve_cfg.max_len)
         self._rngs: dict[int, np.random.Generator] = {}
+        self.stats = {
+            "decode_steps": 0, "decode_rows": 0, "free_slot_rows": 0,
+            "padded_rows": 0, "skipped_all_free_steps": 0,
+            "prefill_tokens": 0, "prefix_reused_tokens": 0,
+            "parks": 0, "resumes": 0, "admit_stalls": 0,
+        }
 
         max_len = serve_cfg.max_len
         if any(b > max_len for b in serve_cfg.prefill_buckets):
             raise ValueError(f"prefill bucket exceeds max_len {max_len}")
-        self._prefill = jax.jit(
-            lambda p, toks: prefill(p, cfg, tokens=toks, max_len=max_len))
 
-        def prefill_padded(p, toks, last_idx):
-            # padded admission: gather the last *real* prompt position per
-            # row before the head projection (pad tail is causally
-            # invisible, and the head only ever sees one position)
-            caches = init_cache(cfg, toks.shape[0], max_len)
-            logits, new_caches, _ = forward(p, cfg, tokens=toks,
-                                            caches=caches,
-                                            last_index=last_idx)
-            return logits[:, 0, :], new_caches
-        self._prefill_padded = jax.jit(prefill_padded)
-        self._decode = jax.jit(
-            lambda p, caches, tok, pos: decode_step(p, cfg, caches, pos,
-                                                    tokens=tok))
-        self._scatter = jax.jit(self._scatter_impl)
+        self._paged = serve_cfg.kv_page_size is not None
+        if self._paged:
+            self._caches = None        # no monolithic slot cache allocated
+            self._kv = PagedKV(
+                cfg, slots=serve_cfg.slots, max_len=max_len,
+                page_size=serve_cfg.kv_page_size,
+                pool_pages=serve_cfg.kv_pool_pages,
+                cold_store=serve_cfg.kv_cold_store,
+                codec=serve_cfg.kv_evict_codec,
+                prefix_sharing=serve_cfg.kv_prefix_sharing,
+                restore_workers=serve_cfg.kv_restore_workers)
+            self._resume_q: deque = deque()     # (req, parked, pos, next)
+            self._parked: dict = {}             # manual parks, by req id
+            self._decode_paged = jax.jit(
+                lambda p, pools, pages, tok, pos: decode_step(
+                    p, cfg, pools, pos, tokens=tok, cache_pages=pages))
+            self._prefill_fns: dict = {}        # cache_len -> jit
+            self._prefill_pad_fns: dict = {}
+            self._partial_fns: dict = {}        # n_ctx -> jit
+            self._scatter_paged = jax.jit(self._scatter_paged_impl)
+        else:
+            self._kv = None
+            self._caches = init_cache(cfg, serve_cfg.slots, max_len)
+            self._prefill = jax.jit(
+                lambda p, toks: prefill(p, cfg, tokens=toks,
+                                        max_len=max_len))
+
+            def prefill_padded(p, toks, last_idx):
+                # padded admission: gather the last *real* prompt position
+                # per row before the head projection (pad tail is causally
+                # invisible, and the head only ever sees one position)
+                caches = init_cache(cfg, toks.shape[0], max_len)
+                logits, new_caches, _ = forward(p, cfg, tokens=toks,
+                                                caches=caches,
+                                                last_index=last_idx)
+                return logits[:, 0, :], new_caches
+            self._prefill_padded = jax.jit(prefill_padded)
+            self._decode = jax.jit(
+                lambda p, caches, tok, pos: decode_step(p, cfg, caches, pos,
+                                                        tokens=tok))
+            self._scatter = jax.jit(self._scatter_impl)
 
     @classmethod
     def from_container(cls, cfg: ModelConfig, blob: bytes, *,
@@ -176,8 +231,51 @@ class ServeSession:
         return sum(s.req is not None for s in self._slots)
 
     @property
+    def num_parked(self) -> int:
+        """Requests evicted to the compressed cold store (paged mode):
+        auto-parked ones waiting to resume, plus manual :meth:`park`\\ s."""
+        if not self._paged:
+            return 0
+        return len(self._resume_q) + len(self._parked)
+
+    @property
     def pending(self) -> bool:
-        return bool(self._queue) or self.num_active > 0
+        active = bool(self._queue) or self.num_active > 0
+        if self._paged:
+            # manual parks (self._parked) wait for an explicit resume();
+            # auto-parked requests re-admit themselves, so they count
+            return active or bool(self._resume_q)
+        return active
+
+    def park(self, handle: RequestHandle) -> None:
+        """Evict ``handle``'s slot to the compressed cold store.  The
+        request keeps its sampling state and resumes **token-identically**
+        (int8 caches round-trip bit-exactly) after :meth:`resume`."""
+        if not self._paged:
+            raise ValueError("park() needs the paged KV cache "
+                             "(ServeConfig.kv_page_size)")
+        idx = self._slot_of(handle)
+        slot = self._slots[idx]
+        parked = self._kv.park(idx)
+        self._parked[handle.id] = (handle, parked, slot.pos,
+                                   slot.next_token)
+        slot.clear()
+        self.stats["parks"] += 1
+
+    def resume(self, handle: RequestHandle) -> None:
+        """Queue a manually parked request for re-admission; its pages
+        restore through the lane-parallel decoder on the next steps."""
+        rec = self._parked.pop(handle.id, None)
+        if rec is None:
+            raise ValueError(f"request {handle.id} is not parked")
+        self._kv.prefetch(rec[1])
+        self._resume_q.append(rec)
+
+    def _slot_of(self, handle: RequestHandle) -> int:
+        for i, s in enumerate(self._slots):
+            if s.req is handle:
+                return i
+        raise ValueError(f"request {handle.id} holds no slot")
 
     def swap_weights(self, source) -> int:
         """Swap in a delta ("P-frame") checkpoint step at a batch
@@ -206,13 +304,47 @@ class ServeSession:
             if max_steps is not None and steps >= max_steps:
                 break
 
+    def close(self) -> None:
+        """Release the paged cache's cold store (no-op in slot mode)."""
+        if self._paged:
+            self._kv.close()
+
+    # -- capacity accounting (one source of truth for bench + admission) ----
+
+    def kv_bytes_per_slot(self) -> int:
+        """Device KV bytes one request at full ``max_len`` context costs —
+        derived from the real cache shapes via ``jax.eval_shape``, never
+        recomputed by hand (``serve.kv.kv_cache_bytes``)."""
+        return kv_cache_bytes(self.cfg, 1, self.serve_cfg.max_len)
+
+    def kv_report(self) -> dict:
+        """Total-KV accounting: device-resident bytes plus compressed
+        host bytes, the per-slot cost, and the scheduler counters."""
+        if self._paged:
+            r = self._kv.report()
+        else:
+            r = {"mode": "slots",
+                 "device_bytes": int(sum(
+                     l.nbytes for l in jax.tree.leaves(self._caches))),
+                 "host_compressed_bytes": 0}
+        r["slots"] = len(self._slots)
+        r["max_len"] = self.serve_cfg.max_len
+        r["bytes_per_slot"] = self.kv_bytes_per_slot()
+        r["scheduler"] = dict(self.stats)
+        return r
+
     # -- scheduler -----------------------------------------------------------
 
     def step(self) -> None:
         """One scheduler tick: admit onto free slots, then one batched
-        decode step over all slots, then evict finished requests."""
+        decode step, then evict finished requests.  In slot mode the
+        decode batch spans every slot; in paged mode it is compacted to
+        the active ones."""
+        if self._paged:
+            return self._step_paged()
         self._admit()
         if self.num_active == 0:
+            self.stats["skipped_all_free_steps"] += 1
             return
         tok = np.zeros(len(self._slots), np.int32)
         pos = np.zeros(len(self._slots), np.int32)
@@ -220,6 +352,9 @@ class ServeSession:
             if slot.req is not None:
                 tok[i] = slot.next_token
                 pos[i] = slot.pos
+        self.stats["decode_steps"] += 1
+        self.stats["decode_rows"] += len(self._slots)
+        self.stats["free_slot_rows"] += len(self._slots) - self.num_active
         logits, self._caches = self._decode(
             self.params, self._caches, jnp.asarray(tok), jnp.asarray(pos))
         logits = np.asarray(logits)
@@ -230,7 +365,7 @@ class ServeSession:
             nxt = self._sample(logits[i], slot.req)
             slot.req.tokens.append(nxt)
             slot.next_token = nxt
-            self._maybe_evict(slot)
+            self._maybe_evict(slot, i)
 
     def _admit(self) -> None:
         """Admit queued requests onto free slots.  The FIFO prefix sharing
@@ -265,13 +400,15 @@ class ServeSession:
             self._place(caches_g, slots_idx)
             logits = np.asarray(logits)
             for j, req in enumerate(group):
-                slot = self._slots[slots_idx[j]]
+                i = slots_idx[j]
+                slot = self._slots[i]
                 first = self._sample(logits[j], req)
                 req.tokens.append(first)
                 slot.req = req
                 slot.pos = req.prompt.size
                 slot.next_token = first
-                self._maybe_evict(slot)
+                self.stats["prefill_tokens"] += length
+                self._maybe_evict(slot, i)
 
     def _place(self, caches_g, slots_idx: list) -> None:
         """Scatter a batch-k prefill's caches into slots ``slots_idx``:
@@ -288,7 +425,7 @@ class ServeSession:
             self._caches = self._scatter(self._caches, row,
                                          jnp.asarray(slot_i, jnp.int32))
 
-    def _maybe_evict(self, slot: _Slot) -> None:
+    def _maybe_evict(self, slot: _Slot, idx: int) -> None:
         req = slot.req
         eos = self.serve_cfg.eos_token
         if eos is not None and req.tokens[-1] == eos:
@@ -301,9 +438,212 @@ class ServeSession:
             return
         req.done = True
         self._rngs.pop(req.id, None)
-        slot.req = None
-        slot.pos = 0
-        slot.next_token = 0
+        if self._paged:
+            self._kv.release(idx)
+        slot.clear()
+
+    # -- paged scheduler -----------------------------------------------------
+
+    def _step_paged(self) -> None:
+        self._admit_paged()
+        active = [i for i, s in enumerate(self._slots) if s.req is not None]
+        if not active:
+            self.stats["skipped_all_free_steps"] += 1
+            return
+        # page-boundary allocation; a slot the pool can't grow parks
+        # itself (compressed to host) and re-admits when pressure clears
+        still = []
+        for i in active:
+            if self._kv.ensure_writable(i, self._slots[i].pos):
+                still.append(i)
+            else:
+                self._auto_park(i)
+        active = still
+        if not active:
+            return
+        bs = min(1 << (len(active) - 1).bit_length(), len(self._slots))
+        tok = np.zeros(bs, np.int32)
+        pos = np.zeros(bs, np.int32)
+        pages = np.zeros((bs, self._kv.n_max), np.int32)   # pads -> scratch
+        for j, i in enumerate(active):
+            tok[j] = self._slots[i].next_token
+            pos[j] = self._slots[i].pos
+            pages[j] = self._kv.page_row(i)
+        self.stats["decode_steps"] += 1
+        self.stats["decode_rows"] += bs
+        self.stats["padded_rows"] += bs - len(active)
+        logits, self._kv.pools = self._decode_paged(
+            self.params, self._kv.pools, jnp.asarray(pages),
+            jnp.asarray(tok), jnp.asarray(pos))
+        logits = np.asarray(logits)
+        for j, i in enumerate(active):
+            slot = self._slots[i]
+            slot.pos += 1
+            nxt = self._sample(logits[j], slot.req)
+            slot.req.tokens.append(nxt)
+            slot.next_token = nxt
+            self._maybe_evict(slot, i)
+
+    def _admit_paged(self) -> None:
+        """Resumes first (FIFO), then fresh admissions — one batch=1
+        prefill each, since page tables are per-request."""
+        while self._resume_q:
+            free = [i for i, s in enumerate(self._slots) if s.req is None]
+            if not free:
+                return
+            req, parked, pos, next_token = self._resume_q[0]
+            if not self._kv.resume(free[0], parked):
+                self.stats["admit_stalls"] += 1
+                break                      # pool pressure; retry next step
+            self._resume_q.popleft()
+            slot = self._slots[free[0]]
+            slot.req, slot.pos, slot.next_token = req, pos, next_token
+            self.stats["resumes"] += 1
+        while self._queue:
+            free = [i for i, s in enumerate(self._slots) if s.req is None]
+            if not free:
+                return
+            req = self._queue[0]
+            # fresh admissions may park a victim slot to make room, but
+            # never while resumes are waiting (no priority inversion)
+            make_room = self._park_victim if not self._resume_q else None
+            min_len = self._bucket_len(req.prompt.size)
+            ctx_len = self._kv.admit(free[0], req.prompt, min_len=min_len,
+                                     make_room=make_room)
+            if ctx_len is None:
+                self.stats["admit_stalls"] += 1
+                return
+            self._queue.popleft()
+            logits_row = self._prefill_paged(free[0], req, ctx_len)
+            self._kv.publish(free[0])
+            slot = self._slots[free[0]]
+            first = self._sample(logits_row, req)
+            req.tokens.append(first)
+            slot.req = req
+            slot.pos = req.prompt.size
+            slot.next_token = first
+            self._maybe_evict(slot, free[0])
+
+    def _prefill_paged(self, idx: int, req: RequestHandle,
+                       ctx_len: int) -> np.ndarray:
+        """Prefill into the slot's freshly built page table.  With a
+        shared-prefix hit only the suffix runs (partial prefill over the
+        gathered context pages); otherwise the whole (bucketed) prompt
+        prefills into a contiguous cache that is scattered to the pages."""
+        prompt = req.prompt
+        page = self._kv.page
+        ids = self._kv.slot_ids(idx)
+        if ctx_len > 0:
+            n_ctx = ctx_len // page
+            fn = self._partial_prefill_fn(n_ctx)
+            logits, self._kv.pools = fn(
+                self.params, self._kv.pools, jnp.asarray(ids, jnp.int32),
+                jnp.asarray(prompt[None, ctx_len:]))
+            self.stats["prefix_reused_tokens"] += ctx_len
+            self.stats["prefill_tokens"] += prompt.size - ctx_len
+            return np.asarray(logits)[0]
+        length = self._bucket_len(prompt.size)
+        cache_len = len(ids) * page
+        toks = np.zeros((1, length), np.int32)
+        toks[0, :prompt.size] = prompt
+        if prompt.size < length:
+            logits, caches = self._prefill_pad_fn(cache_len)(
+                self.params, jnp.asarray(toks),
+                jnp.asarray([prompt.size - 1], jnp.int32))
+        else:
+            logits, caches = self._prefill_fn(cache_len)(
+                self.params, jnp.asarray(toks))
+        self._kv.pools = self._scatter_paged(
+            self._kv.pools, caches, jnp.asarray(ids, jnp.int32))
+        self.stats["prefill_tokens"] += length
+        return np.asarray(logits)[0]
+
+    def _auto_park(self, idx: int) -> None:
+        slot = self._slots[idx]
+        parked = self._kv.park(idx)
+        rec = (slot.req, parked, slot.pos, slot.next_token)
+        self._kv.prefetch(parked)
+        self._resume_q.append(rec)
+        slot.clear()
+        self.stats["parks"] += 1
+
+    def _park_victim(self) -> bool:
+        """Pool-pressure callback: auto-park the active slot holding the
+        most pages (ties to the youngest request, keeping older requests
+        running).  False when no slot can be parked."""
+        cands = [(len(self._kv.slot_ids(i)), self._slots[i].req.id, i)
+                 for i, s in enumerate(self._slots) if s.req is not None]
+        if not cands:
+            return False
+        _, _, idx = max(cands)
+        self._auto_park(idx)
+        return True
+
+    # -- jit caches (paged mode compiles per cache length / ctx pages) ------
+
+    def _prefill_fn(self, cache_len: int):
+        fn = self._prefill_fns.get(cache_len)
+        if fn is None:
+            cfg = self.cfg
+            fn = jax.jit(lambda p, toks: prefill(p, cfg, tokens=toks,
+                                                 max_len=cache_len))
+            self._prefill_fns[cache_len] = fn
+        return fn
+
+    def _prefill_pad_fn(self, cache_len: int):
+        fn = self._prefill_pad_fns.get(cache_len)
+        if fn is None:
+            cfg = self.cfg
+
+            def pad_fn(p, toks, last_idx):
+                caches = init_cache(cfg, toks.shape[0], cache_len)
+                logits, new_caches, _ = forward(p, cfg, tokens=toks,
+                                                caches=caches,
+                                                last_index=last_idx)
+                return logits[:, 0, :], new_caches
+            fn = jax.jit(pad_fn)
+            self._prefill_pad_fns[cache_len] = fn
+        return fn
+
+    def _partial_prefill_fn(self, n_ctx: int):
+        """Suffix prefill over a shared prefix: gather the slot's pages to
+        a contiguous view, run the suffix at ``cache_pos = n_ctx * page``
+        (scalar — the S>1 cache write / causal-mask path), scatter back
+        only the suffix pages.  The shared context pages are read-only."""
+        fn = self._partial_fns.get(n_ctx)
+        if fn is None:
+            cfg, page = self.cfg, self._kv.page
+
+            def partial_fn(p, pools, ids, toks):
+                def gather(pool):
+                    g = jnp.take(pool, ids, axis=1)
+                    return g.reshape(g.shape[0], 1, g.shape[1] * page,
+                                     *g.shape[3:])
+                contig = jax.tree.map(gather, pools)
+                logits, newc, _ = forward(p, cfg, tokens=toks,
+                                          caches=contig,
+                                          cache_pos=n_ctx * page,
+                                          last_only=True)
+
+                def put(pool, c):
+                    c = c.reshape(c.shape[0], ids.shape[0], page,
+                                  *c.shape[3:])
+                    return pool.at[:, ids[n_ctx:]].set(
+                        c[:, n_ctx:].astype(pool.dtype))
+                return logits[:, 0], jax.tree.map(put, pools, newc)
+            fn = jax.jit(partial_fn)
+            self._partial_fns[n_ctx] = fn
+        return fn
+
+    @staticmethod
+    def _scatter_paged_impl(pools, caches, ids):
+        """Scatter a batch-1 prefill's contiguous caches (L, 1, n*page,
+        ...) into pool pages ``ids``."""
+        def put(pool, c):
+            page = pool.shape[2]
+            c = c.reshape(c.shape[0], ids.shape[0], page, *c.shape[3:])
+            return pool.at[:, ids].set(c.astype(pool.dtype))
+        return jax.tree.map(put, pools, caches)
 
     # -- helpers -------------------------------------------------------------
 

@@ -1,0 +1,403 @@
+"""Paged KV cache (``repro.serve.kv``): the ``kv-q8-cabac`` page codec
+round trip, token identity through forced eviction + re-admission and
+manual park/resume, copy-on-write prefix sharing, compacted decode
+batches (free slots burn no decode FLOPs), the cold-store registry, and
+capacity accounting."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro import compression
+from repro.configs import get_smoke_config
+from repro.models.transformer import init_params
+from repro.serve.backends import (DirKVStore, available_kv_stores,
+                                  get_backend, get_kv_store,
+                                  resolve_kv_store)
+from repro.serve.kv import PagedKV, kv_cache_bytes
+from repro.serve.session import ServeConfig, ServeSession
+
+skip_on_forced_numpy = pytest.mark.skipif(
+    os.environ.get("REPRO_CABAC_BACKEND") == "numpy",
+    reason="smoke-model serving decode is impractical on the forced "
+           "numpy lane engine; codec-level paging coverage runs above")
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    # int8 KV cache: the eviction codec is lossless on cache levels, so
+    # paged serving is *token-identical* to unpaged (the acceptance bar)
+    cfg = get_smoke_config("llama3-8b").replace(q8_cache=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run_session(cfg, params, prompts, serve_cfg, max_new=8):
+    s = ServeSession(cfg, params, serve_cfg=serve_cfg)
+    handles = [s.submit(p, max_new_tokens=max_new) for p in prompts]
+    s.run(max_steps=2000)
+    assert all(h.done for h in handles)
+    outs = [list(h.result()) for h in handles]
+    return s, outs
+
+
+# -- kv-q8-cabac page codec (satellite: registered + round-trip) -------------
+
+def test_kv_codec_registered():
+    assert "kv-q8-cabac" in compression.available()
+    codec = compression.get("kv-q8-cabac")
+    assert codec.name == "kv-q8-cabac"
+
+
+def test_kv_codec_int8_pages_lossless():
+    rng = np.random.default_rng(0)
+    # cache levels are small-magnitude (activations on the kv_cache_delta
+    # grid), which is what the CABAC bin model compresses
+    pages = {"k": np.clip(rng.normal(0, 8, (2, 3, 8, 2, 4)), -127,
+                          127).astype(np.int8),
+             "v": rng.integers(-20, 20, (2, 3, 8, 2, 4)).astype(np.int8)}
+    codec = compression.get("kv-q8-cabac", step=1 / 16)
+    art = codec.compress(pages)
+    assert art.report["compressed_bytes"] < art.report["raw_bytes"]
+    out = codec.decompress(art.blob, like=pages)
+    for k in pages:
+        assert out[k].dtype == np.int8
+        assert np.array_equal(out[k], pages[k])
+
+
+def test_kv_codec_float_pages_match_q8_reconstruction():
+    """Float pages are q8-block-quantized before entropy coding: the
+    restore equals the q8 reconstruction exactly (levels and scales both
+    round-trip bit-exactly through the container)."""
+    rng = np.random.default_rng(1)
+    x32 = rng.standard_normal((2, 4, 16, 8)).astype(np.float32)
+    x16 = rng.standard_normal((2, 4, 16, 8)).astype(ml_dtypes.bfloat16)
+    codec = compression.get("kv-q8-cabac")
+    art = codec.compress({"a": x32, "b": x16})
+    out = codec.decompress(art.blob)
+    for name, x in (("a", x32), ("b", x16)):
+        codes, scale = compression.q8_encode(jnp.asarray(x))
+        want = np.asarray(compression.q8_decode(codes, scale)).astype(x.dtype)
+        assert out[name].dtype == x.dtype
+        assert np.array_equal(out[name], want), name
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       page=st.sampled_from([1, 3, 8, 16]),
+       dtype=st.sampled_from(["int8", "float32", "bfloat16"]))
+def test_kv_codec_roundtrip_property(seed, page, dtype):
+    """Property (satellite): compress/evict/restore round-trips bit-exact
+    q8 levels for any page size and cache dtype."""
+    rng = np.random.default_rng(seed)
+    shape = (2, rng.integers(1, 4), page, 4)
+    if dtype == "int8":
+        x = rng.integers(-128, 128, shape).astype(np.int8)
+    else:
+        x = (rng.standard_normal(shape) * rng.uniform(0.1, 4)).astype(
+            ml_dtypes.bfloat16 if dtype == "bfloat16" else np.float32)
+    codec = compression.get("kv-q8-cabac")
+    out = codec.decompress(codec.compress({"p": x}).blob)["p"]
+    assert out.dtype == x.dtype
+    if dtype == "int8":
+        assert np.array_equal(out, x)
+    else:
+        codes, scale = compression.q8_encode(jnp.asarray(x))
+        want = np.asarray(compression.q8_decode(codes, scale)).astype(x.dtype)
+        assert np.array_equal(out, want)
+        if dtype == "float32":
+            # f32 reconstructions re-encode to the same levels (bf16
+            # storage rounding can legitimately flip boundary levels)
+            codes2, _ = compression.q8_encode(jnp.asarray(out))
+            assert np.array_equal(np.asarray(codes2), np.asarray(codes))
+
+
+# -- cold-store registry ------------------------------------------------------
+
+def test_kv_store_registry(tmp_path):
+    assert {"host", "dir"} <= set(available_kv_stores())
+    with pytest.raises(KeyError):
+        get_kv_store("no-such-store")
+    store = get_kv_store("dir", root=str(tmp_path))
+    store.put("a", b"xyz")
+    assert "a" in store and store.get("a") == b"xyz"
+    assert store.nbytes() == 3
+    store.drop("a")
+    assert "a" not in store and store.nbytes() == 0
+    store.close()
+    # resolve passes instances through
+    inst = DirKVStore(root=str(tmp_path))
+    assert resolve_kv_store(inst) is inst
+    inst.close()
+
+
+# -- scheduler: token identity (acceptance) ----------------------------------
+
+@skip_on_forced_numpy
+def test_paged_matches_unpaged_no_pressure(smoke):
+    cfg, params = smoke
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 9, 7, 12)]
+    _, ref = _run_session(cfg, params, prompts,
+                          ServeConfig(slots=2, max_len=64))
+    s, out = _run_session(cfg, params, prompts,
+                          ServeConfig(slots=2, max_len=64, kv_page_size=8))
+    assert out == ref
+    s.close()
+
+
+@skip_on_forced_numpy
+def test_paged_token_identity_under_forced_eviction(smoke):
+    """Acceptance: a pool too small for the active set forces compressed
+    eviction (park) and re-admission (restore) mid-generation; every
+    request's greedy tokens still equal the unpaged session's."""
+    cfg, params = smoke
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (12, 10, 9, 11)]
+    _, ref = _run_session(cfg, params, prompts,
+                          ServeConfig(slots=4, max_len=64), max_new=16)
+    s, out = _run_session(
+        cfg, params, prompts,
+        ServeConfig(slots=4, max_len=64, kv_page_size=4, kv_pool_pages=20,
+                    kv_restore_workers=1), max_new=16)
+    assert s.stats["parks"] > 0, "pool must be tight enough to force parks"
+    assert s._kv.stats["pages_restored"] > 0
+    assert s._kv.stats["bytes_to_host"] > 0
+    assert out == ref
+    s.close()
+
+
+@skip_on_forced_numpy
+def test_parked_then_resumed_request_is_token_identical(smoke):
+    """Scheduler test (satellite): manual park -> later resume produces a
+    token stream identical to a never-parked unpaged run."""
+    cfg, params = smoke
+    rng = np.random.default_rng(4)
+    p1 = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    _, ref = _run_session(cfg, params, [p1, p2],
+                          ServeConfig(slots=2, max_len=64), max_new=10)
+
+    s = ServeSession(cfg, params, serve_cfg=ServeConfig(
+        slots=2, max_len=64, kv_page_size=4))
+    h1 = s.submit(p1, max_new_tokens=10)
+    h2 = s.submit(p2, max_new_tokens=10)
+    s.step()
+    s.step()
+    assert not h1.done
+    s.park(h1)                       # mid-generation, KV leaves the device
+    assert s.num_parked == 1
+    assert s._kv.stats["pages_evicted"] > 0
+    s.run()                          # h2 finishes; h1 stays parked
+    assert h2.done and not h1.done
+    s.resume(h1)
+    s.run()
+    assert h1.done
+    assert [list(h1.result()), list(h2.result())] == ref
+    s.close()
+
+
+def test_park_requires_paged_mode(smoke):
+    cfg, params = smoke
+    s = ServeSession(cfg, params,
+                     serve_cfg=ServeConfig(slots=1, max_len=16))
+    h = s.submit(np.arange(4, dtype=np.int32), max_new_tokens=2)
+    with pytest.raises(ValueError, match="paged"):
+        s.park(h)
+
+
+# -- prefix sharing -----------------------------------------------------------
+
+@skip_on_forced_numpy
+def test_prefix_sharing_prefills_once_with_cow(smoke):
+    """Two requests with a shared system prompt: the shared pages prefill
+    once (the second admission runs a suffix-only partial prefill), the
+    page tables alias only the read-only prefix pages, and tokens match
+    the unpaged session."""
+    cfg, params = smoke
+    rng = np.random.default_rng(5)
+    sys_p = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    pa = np.concatenate([sys_p, rng.integers(0, cfg.vocab_size, 3)
+                         .astype(np.int32)])
+    pb = np.concatenate([sys_p, rng.integers(0, cfg.vocab_size, 5)
+                         .astype(np.int32)])
+    _, ref = _run_session(cfg, params, [pa, pb],
+                          ServeConfig(slots=2, max_len=64), max_new=6)
+
+    s = ServeSession(cfg, params, serve_cfg=ServeConfig(
+        slots=2, max_len=64, kv_page_size=4))
+    ha = s.submit(pa, max_new_tokens=6)
+    hb = s.submit(pb, max_new_tokens=6)
+    s.step()                          # admits both; b hits a's prefix
+    assert s._kv.stats["prefix_hits"] == 1
+    assert s._kv.stats["prefix_pages_reused"] == 2        # 8 tokens / page 4
+    assert s.stats["prefix_reused_tokens"] == 8
+    # only the suffixes prefilled on the second admission
+    assert s.stats["prefill_tokens"] == pa.size + (pb.size - 8)
+    ids_a, ids_b = s._kv.slot_ids(0), s._kv.slot_ids(1)
+    assert ids_a[:2] == ids_b[:2], "prefix pages must be aliased"
+    assert not (set(ids_a[2:]) & set(ids_b[2:])), \
+        "writable pages must never alias"
+    s.run()
+    assert [list(ha.result()), list(hb.result())] == ref
+    s.close()
+
+
+@skip_on_forced_numpy
+def test_prefix_sharing_disabled_never_aliases(smoke):
+    cfg, params = smoke
+    rng = np.random.default_rng(6)
+    p = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    s = ServeSession(cfg, params, serve_cfg=ServeConfig(
+        slots=2, max_len=64, kv_page_size=4, kv_prefix_sharing=False))
+    s.submit(p, max_new_tokens=4)
+    s.submit(p.copy(), max_new_tokens=4)
+    s.step()
+    assert s._kv.stats["prefix_hits"] == 0
+    assert not (set(s._kv.slot_ids(0)) & set(s._kv.slot_ids(1)))
+    s.run()
+    s.close()
+
+
+# -- decode FLOPs on free slots (satellite) -----------------------------------
+
+@skip_on_forced_numpy
+def test_free_slots_burn_no_decode_rows(smoke):
+    """Paged decode batches are compacted: one active request in a
+    4-slot session decodes batch rows for itself only, and an all-free
+    tick skips the decode call entirely.  The slot-mode counter shows
+    the contrast (free slots ride every batch there)."""
+    cfg, params = smoke
+    p = np.arange(6, dtype=np.int32)
+
+    sp = ServeSession(cfg, params, serve_cfg=ServeConfig(
+        slots=4, max_len=32, kv_page_size=8))
+    h = sp.submit(p, max_new_tokens=5)
+    sp.run()
+    assert h.done
+    assert sp.stats["free_slot_rows"] == 0
+    assert sp.stats["decode_rows"] == sp.stats["decode_steps"]  # batch of 1
+    before = sp.stats["decode_steps"]
+    sp.step()                                   # all slots free
+    assert sp.stats["decode_steps"] == before
+    assert sp.stats["skipped_all_free_steps"] >= 1
+    sp.close()
+
+    su = ServeSession(cfg, params,
+                      serve_cfg=ServeConfig(slots=4, max_len=32))
+    h = su.submit(p, max_new_tokens=5)
+    su.run()
+    assert h.done
+    assert su.stats["free_slot_rows"] > 0       # slot mode pays for them
+
+
+# -- composition with the rest of the serving stack ---------------------------
+
+@skip_on_forced_numpy
+def test_swap_weights_composes_with_paged_cache(smoke, tmp_path):
+    """Live delta weight swap mid-generation on a *paged* session: same
+    tokens as the identical swap sequence on an unpaged session."""
+    from repro.checkpoint import CheckpointConfig, CheckpointManager
+    cfg, params = smoke
+    flat = dict(compression.flatten_tree(jax.device_get(params)))
+    rng = np.random.default_rng(7)
+    pert = {k: (v * (1 + 1e-4 * rng.standard_normal(v.shape))).astype(v.dtype)
+            if np.asarray(v).dtype.kind == "f" else v
+            for k, v in flat.items()}
+    mgr = CheckpointManager(CheckpointConfig(
+        str(tmp_path / "ckpt"), codec="deepcabac-delta", delta_every=4))
+    mgr.save({"params": params, "opt": {"count": np.int32(0)}}, 1)
+    mgr.save({"params": compression.unflatten_like(pert, params),
+              "opt": {"count": np.int32(1)}}, 2)
+    kf_dir = os.path.join(mgr.cfg.directory, "step_00000001")
+    delta_dir = os.path.join(mgr.cfg.directory, "step_00000002")
+    with open(os.path.join(kf_dir, "params.dcbc"), "rb") as f:
+        kf_blob = f.read()
+
+    def run(serve_cfg):
+        backend = get_backend("container", track_levels=True)
+        s = ServeSession(cfg, kf_blob, backend=backend, serve_cfg=serve_cfg)
+        h = s.submit(np.arange(5, dtype=np.int32), max_new_tokens=8)
+        s.step()
+        s.step()
+        assert s.swap_weights(delta_dir) > 0
+        s.run()
+        assert h.done
+        return list(h.result())
+
+    paged = run(ServeConfig(slots=2, max_len=32, kv_page_size=4))
+    unpaged = run(ServeConfig(slots=2, max_len=32))
+    assert paged == unpaged
+
+
+def test_paged_rejects_stateful_families():
+    cfg = get_smoke_config("mamba2-2.7b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="token axis"):
+        ServeSession(cfg, params, serve_cfg=ServeConfig(
+            slots=1, max_len=32, kv_page_size=8))
+
+
+def test_pool_must_hold_one_full_slot(smoke):
+    cfg, params = smoke
+    with pytest.raises(Exception, match="kv_pool_pages"):
+        ServeSession(cfg, params, serve_cfg=ServeConfig(
+            slots=2, max_len=64, kv_page_size=8, kv_pool_pages=4))
+
+
+# -- capacity accounting (satellite) ------------------------------------------
+
+def test_kv_capacity_reporting(smoke):
+    """kv_bytes_per_slot derives from the real cache shapes; the paged
+    report accounts device + compressed-host bytes from one source."""
+    from repro.models.transformer import init_cache
+    cfg, params = smoke
+    per_slot = kv_cache_bytes(cfg, 1, 64)
+    want = int(sum(l.nbytes for l in
+                   jax.tree.leaves(init_cache(cfg, 1, 64))))
+    assert per_slot == want
+
+    s = ServeSession(cfg, params, serve_cfg=ServeConfig(
+        slots=2, max_len=64, kv_page_size=8))
+    assert s.kv_bytes_per_slot() == per_slot
+    r = s.kv_report()
+    assert r["mode"] == "paged"
+    assert r["device_bytes"] == int(sum(
+        l.nbytes for l in jax.tree.leaves(s._kv.pools)))
+    assert r["host_compressed_bytes"] == 0
+    assert r["bytes_per_slot"] == per_slot
+    assert "scheduler" in r and "free_pages" in r
+    s.close()
+
+    su = ServeSession(cfg, params,
+                      serve_cfg=ServeConfig(slots=2, max_len=64))
+    ru = su.kv_report()
+    assert ru["mode"] == "slots"
+    assert ru["device_bytes"] == 2 * per_slot
+    assert ru["bytes_per_slot"] == per_slot
+
+
+@skip_on_forced_numpy
+def test_park_moves_bytes_to_host(smoke):
+    cfg, params = smoke
+    s = ServeSession(cfg, params, serve_cfg=ServeConfig(
+        slots=1, max_len=32, kv_page_size=4))
+    h = s.submit(np.arange(6, dtype=np.int32), max_new_tokens=6)
+    s.step()
+    s.park(h)
+    r = s.kv_report()
+    assert r["host_compressed_bytes"] > 0
+    # compressed eviction actually compresses
+    assert r["host_compressed_bytes"] < r["stats"]["pages_evicted"] * \
+        (r["device_bytes"] // r["pool_pages"])
+    s.resume(h)
+    s.run()
+    assert h.done and s.kv_report()["host_compressed_bytes"] == 0
+    s.close()
