@@ -21,6 +21,12 @@ headline throughput/latency numbers of each bench:
   (higher better; hard invariants pin it >= 3x slot mode and require
   ``tokens_match`` — the paged run stays token-identical through forced
   eviction/restore) and ``restore_ms_mean`` (lower better)
+* ``BENCH_zoo.json``           — multi-tenant zoo ``dedup_ratio`` (higher
+  better; hard invariant >= 2x for 3 delta variants over one keyframe),
+  admission ``cold_s``/``warm_s`` (lower better; hard invariant: delta-
+  warm admit strictly faster than cold) and routed ``total_tok_s``
+  (higher better; hard invariant: routed outputs stay token-identical
+  to dedicated single-model sessions, and the budget forced eviction)
 
 Escape hatch: a commit whose message contains ``[bench-skip]`` passes the
 gate with a notice (pass the message via ``--commit-message`` — CI hands
@@ -43,7 +49,7 @@ import sys
 
 BENCH_FILES = ("BENCH_serve.json", "BENCH_cold_start.json",
                "BENCH_shard_restore.json", "BENCH_delta.json",
-               "BENCH_kv_paging.json")
+               "BENCH_kv_paging.json", "BENCH_zoo.json")
 
 
 def _load(path: str) -> dict | None:
@@ -90,6 +96,17 @@ def smoke_metrics(fname: str, report: dict) -> dict[str, tuple[float, bool]]:
             elif r["path"] == "evict_restore" and r["pages_restored"]:
                 out["kv_paging/evict_restore/restore_ms_mean"] = (
                     float(r["restore_ms_mean"]), False)
+    elif fname == "BENCH_zoo.json":
+        for r in rows:
+            if r["path"] == "dedup":
+                out["zoo/dedup/dedup_ratio"] = (float(r["dedup_ratio"]),
+                                                True)
+            elif r["path"] == "admit":
+                out["zoo/admit/cold_s"] = (float(r["cold_s"]), False)
+                out["zoo/admit/warm_s"] = (float(r["warm_s"]), False)
+            elif r["path"] == "route":
+                out["zoo/route/total_tok_s"] = (float(r["total_tok_s"]),
+                                                True)
     return out
 
 
@@ -135,6 +152,32 @@ def check_invariants(fname: str, report: dict) -> list[str]:
                     f"sessions/GiB vs slot mode — the paged cache must "
                     f"sustain >= 3x concurrent long-context sessions per "
                     f"GiB of device KV")
+    elif fname == "BENCH_zoo.json":
+        for r in report.get("rows", []):
+            if r["path"] == "dedup":
+                if r["variants"] >= 3 and r["dedup_ratio"] < 2.0:
+                    errors.append(
+                        f"zoo: dedup_ratio {r['dedup_ratio']:.2f}x for "
+                        f"{r['variants']} variants — the content-addressed "
+                        f"store must dedup >= 2x with 3 delta variants "
+                        f"over one keyframe")
+            elif r["path"] == "admit":
+                if r["warm_s"] >= r["cold_s"]:
+                    errors.append(
+                        f"zoo: delta-warm admit ({r['warm_s']}s) not "
+                        f"faster than cold ({r['cold_s']}s) — warming from "
+                        f"the resident base's levels must beat the full "
+                        f"chain decode")
+            elif r["path"] == "route":
+                if not r["tokens_match"]:
+                    errors.append(
+                        "zoo: routed outputs diverged from dedicated "
+                        "single-model sessions — multi-tenancy must stay "
+                        "token-identical")
+                if r["evictions"] < 1:
+                    errors.append(
+                        "zoo: the route bench's budget never forced an "
+                        "eviction — the admission loop went unexercised")
     return errors
 
 

@@ -34,10 +34,10 @@ import numpy as np
 
 def _params(prune: float, seed: int = 0):
     import jax
-    from repro.configs import get_smoke_config
+    from repro import configs
     from repro.models.transformer import init_params
 
-    cfg = get_smoke_config("llama3-8b")
+    cfg = configs.get("llama3-8b", smoke=True)
     params = jax.device_get(init_params(cfg, jax.random.PRNGKey(seed)))
     from repro.compression import flatten_tree
     rng = np.random.default_rng(seed)

@@ -61,14 +61,14 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     import jax
-    from repro.configs import get_smoke_config
+    from repro import configs
     from repro.models.transformer import init_params
     from repro.serve.kv import kv_cache_bytes
     from repro.serve.session import ServeConfig
 
     # int8 cache: the eviction codec is lossless on the cache levels, so
     # the paged run must be token-identical to slot mode
-    cfg = get_smoke_config("llama3-8b").replace(q8_cache=True)
+    cfg = configs.get("llama3-8b", smoke=True).replace(q8_cache=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
 
     max_len = 128 if args.fast else 256

@@ -37,11 +37,12 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
 def _param_counts():
     """N (matmul params) and N_active per arch, from the configs."""
     import jax
-    from repro.configs import ARCH_IDS, get_config
+    from repro import configs
+    from repro.configs import ARCH_IDS
     from repro.models.transformer import init_params
     out = {}
     for arch in ARCH_IDS:
-        cfg = get_config(arch)
+        cfg = configs.get(arch)
         shapes = jax.eval_shape(
             lambda c=cfg: init_params(c, jax.random.PRNGKey(0)))
         flat = jax.tree_util.tree_flatten_with_path(shapes)[0]

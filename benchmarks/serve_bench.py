@@ -82,10 +82,10 @@ def main() -> None:
 
     import jax
     from repro import compression
-    from repro.configs import get_smoke_config
+    from repro import configs
     from repro.models.transformer import init_params
 
-    cfg = get_smoke_config("llama3-8b")
+    cfg = configs.get("llama3-8b", smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
     blob = compression.get("serve-q8").compress(params).blob
 

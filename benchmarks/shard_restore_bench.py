@@ -33,10 +33,10 @@ import numpy as np
 
 def _state_dict(copies: int):
     import jax
-    from repro.configs import get_smoke_config
+    from repro import configs
     from repro.models.transformer import init_params
 
-    cfg = get_smoke_config("llama3-8b")
+    cfg = configs.get("llama3-8b", smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
     if copies == 1:
         return cfg, params

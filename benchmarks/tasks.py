@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import flatten_tree, unflatten_like
-from repro.configs import get_smoke_config
+from repro import configs
 from repro.core.fim import variational_fim, vd_sparsify
 from repro.data.pipeline import make_batch, make_eval_batches
 from repro.models.transformer import train_loss
@@ -120,7 +120,7 @@ class LMFixture:
 
 
 def train_small_lm(steps: int = 150, seed: int = 0) -> LMFixture:
-    cfg = get_smoke_config("llama3-8b")
+    cfg = configs.get("llama3-8b", smoke=True)
     from repro.models.transformer import init_params
     params = init_params(cfg, jax.random.PRNGKey(seed))
     ocfg = AdamWConfig(lr=2e-3)

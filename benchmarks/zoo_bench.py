@@ -1,0 +1,251 @@
+"""Multi-tenant model-zoo benchmark: dedup, admission, routed serving.
+
+Builds a llama3 smoke keyframe plus delta finetune variants (star
+topology — every variant chains straight to the keyframe), then
+measures the three economics the zoo trades on:
+
+* ``dedup``  — content-addressed :class:`~repro.serve.zoo.ShardStore`
+  on-disk footprint for base + N variants vs naive per-model copies
+  (``dedup_ratio = logical / physical``).
+* ``admit``  — cold admission (full chain entropy decode from disk) vs
+  delta-warm admission (fork the resident base's tracked levels, apply
+  only the variant's own delta steps).
+* ``route``  — a :class:`~repro.serve.zoo.ZooRouter` serving
+  interleaved traffic to base + 2 variants under an HBM budget that
+  forces eviction, checked token-identical against dedicated
+  single-model sessions.
+
+Writes ``BENCH_zoo.json`` (same trajectory contract as the other
+BENCH files; gated by ``check_regression.py`` — dedup_ratio >= 2.0 for
+3 variants, warm admit strictly faster than cold, tokens_match).
+
+Run: PYTHONPATH=src python -m benchmarks.zoo_bench [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+
+def _build_family(root: str, variants: int):
+    """Keyframe at step 1 + ``variants`` partial-finetune delta steps."""
+    import jax
+    from repro import compression, configs
+    from repro.checkpoint import delta
+    from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+    from repro.checkpoint.sharded import MANIFEST_NAME
+    from repro.compression.tree import flatten_tree
+    from repro.models.transformer import init_params
+
+    cfg = configs.get("llama3-8b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    CheckpointManager(CheckpointConfig(
+        directory=root, sharded=True,
+        codec="deepcabac-delta")).save({"params": params}, step=1)
+    codec = compression.get("deepcabac-delta")
+    flat = flatten_tree(params)
+    base_entries = codec.quantize_entries(flat)
+    names = sorted(k for k, v in flat.items() if v.dtype.kind == "f")
+    touched = set(names[:max(1, len(names) // 4)])
+    for i in range(variants):
+        rng = np.random.default_rng(100 + i)
+        pert = {k: (v * (1 + 5e-4 * rng.standard_normal(v.shape)))
+                .astype(v.dtype) if k in touched else v
+                for k, v in flat.items()}
+        dentries = codec.delta_entries(pert, base_entries)
+        payloads, manifest = delta.write_delta(
+            dentries, codec_name=codec.name, base=delta.base_ref(root, 1),
+            num_gr=codec.coder.num_gr, chunk_size=codec.coder.chunk_size)
+        d = delta.step_dir(root, 2 + i)
+        os.makedirs(d)
+        for fname, blob in payloads.items():
+            with open(os.path.join(d, fname), "wb") as f:
+                f.write(blob)
+        with open(os.path.join(d, MANIFEST_NAME), "w") as f:
+            json.dump(manifest, f, indent=1)
+    return cfg
+
+
+def bench_dedup(root: str, store_dir: str, variants: int) -> dict:
+    from repro.checkpoint import delta
+    from repro.serve.zoo import ShardStore
+
+    store = ShardStore(store_dir)
+    t0 = time.time()
+    store.add("base", delta.step_dir(root, 1))
+    for i in range(variants):
+        store.add(f"var-{i}", delta.step_dir(root, 2 + i))
+    ingest_s = time.time() - t0
+    rep = store.report()
+    store.close()
+    return {
+        "path": "dedup",
+        "models": 1 + variants,
+        "variants": variants,
+        "objects": rep["objects"],
+        "logical_mb": round(rep["logical_bytes"] / 2**20, 3),
+        "physical_mb": round(rep["physical_bytes"] / 2**20, 3),
+        "dedup_ratio": rep["dedup_ratio"],
+        "bytes_deduped_mb": round(rep["stats"]["bytes_deduped"] / 2**20, 3),
+        "ingest_s": round(ingest_s, 4),
+    }
+
+
+def bench_admit(cfg, root: str, store_dir: str) -> dict:
+    """Cold admit of a variant (full chain decode) vs delta-warm admit
+    of its sibling from the already-resident base."""
+    from repro.checkpoint import delta
+    from repro.serve.session import ServeConfig
+    from repro.serve.zoo import ModelZoo, ZooConfig, model_resident_bytes
+
+    serve_cfg = ServeConfig(slots=2, max_len=64)
+    one = model_resident_bytes(cfg, serve_cfg)
+    zoo = ModelZoo(store_dir, ZooConfig(hbm_budget=3 * one,
+                                        serve=serve_cfg))
+    zoo.register("base", cfg, delta.step_dir(root, 1))
+    zoo.register("var-0", cfg, delta.step_dir(root, 2))
+    zoo.register("var-1", cfg, delta.step_dir(root, 3))
+
+    t0 = time.time()
+    zoo.admit("var-0")                       # base not resident: cold,
+    cold_s = time.time() - t0                # full chain decode
+    zoo.admit("base")                        # cold too (keyframe only)
+    t0 = time.time()
+    zoo.admit("var-1")                       # base resident: delta-warm
+    warm_s = time.time() - t0
+    assert zoo.zoo_report()["models"]["var-1"]["last_admit"] == "warm"
+    zoo.close()
+    return {
+        "path": "admit",
+        "cold_s": round(cold_s, 4),
+        "warm_s": round(warm_s, 4),
+        "warm_vs_cold": round(warm_s / max(cold_s, 1e-9), 4),
+    }
+
+
+def bench_route(cfg, root: str, store_dir: str, requests: int,
+                new_tokens: int) -> dict:
+    """Interleaved traffic to base + 2 variants under a 2-model budget
+    (forces eviction); throughput + token identity vs dedicated
+    sessions."""
+    from repro.checkpoint import delta
+    from repro.serve.backends import get_backend
+    from repro.serve.session import ServeConfig, ServeSession
+    from repro.serve.zoo import (ModelZoo, ZooConfig, ZooRouter,
+                                 model_resident_bytes)
+
+    serve_cfg = ServeConfig(slots=2, max_len=64)
+    one = model_resident_bytes(cfg, serve_cfg)
+    zoo = ModelZoo(store_dir, ZooConfig(hbm_budget=2 * one + one // 2,
+                                        serve=serve_cfg))
+    models = {"base": 1, "var-0": 2, "var-1": 3}
+    for mid, step in models.items():
+        zoo.register(mid, cfg, delta.step_dir(root, step))
+    rng = np.random.default_rng(7)
+    prompts = {m: rng.integers(1, cfg.vocab_size, 8 + 3 * j)
+               for j, m in enumerate(models)}
+    order = [m for _ in range(requests) for m in models]
+
+    router = ZooRouter(zoo)
+    t0 = time.time()
+    handles = [(m, router.submit(m, prompts[m], max_new_tokens=new_tokens))
+               for m in order]
+    router.run(max_steps=20000)
+    total_s = time.time() - t0
+    assert all(h.done for _m, h in handles)
+    rep = zoo.zoo_report()
+    zoo.close()
+
+    tokens_match = True
+    for m, step in models.items():
+        mine = [list(map(int, h.result())) for mid, h in handles
+                if mid == m]
+        backend = get_backend("container", track_levels=True)
+        params = backend.load_entries(cfg, delta.restore_levels(root, step))
+        sess = ServeSession.from_loaded(cfg, params, backend=backend,
+                                       serve_cfg=serve_cfg)
+        refs = [sess.submit(prompts[m], max_new_tokens=new_tokens)
+                for _ in mine]
+        sess.run(max_steps=20000)
+        ref = [list(map(int, h.result())) for h in refs]
+        sess.close()
+        tokens_match = tokens_match and mine == ref
+
+    toks = sum(len(h.new_tokens()) for _m, h in handles)
+    return {
+        "path": "route",
+        "models": len(models),
+        "requests": len(order),
+        "total_tokens": toks,
+        "total_s": round(total_s, 4),
+        "total_tok_s": round(toks / max(total_s, 1e-9), 2),
+        "evictions": rep["stats"]["evictions"],
+        "admits_cold": rep["stats"]["admits_cold"],
+        "admits_warm": rep["stats"]["admits_warm"],
+        "tokens_match": bool(tokens_match),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="BENCH_zoo.json")
+    args = ap.parse_args()
+
+    variants = 3                             # dedup >= 2x needs >= 3
+    requests = 2 if args.fast else 4
+    new_tokens = 5 if args.fast else 12
+
+    work = tempfile.mkdtemp(prefix="zoo-bench-")
+    try:
+        root = os.path.join(work, "ckpt")
+        os.makedirs(root)
+        cfg = _build_family(root, variants)
+        rows = [
+            bench_dedup(root, os.path.join(work, "store-dedup"), variants),
+            bench_admit(cfg, root, os.path.join(work, "store-admit")),
+            bench_route(cfg, root, os.path.join(work, "store-route"),
+                        requests, new_tokens),
+        ]
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+    report = {
+        "bench": "model_zoo",
+        "arch": cfg.name,
+        "fast": bool(args.fast),
+        "variants": variants,
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    for r in rows:
+        print(f"zoo/{r['path']},{json.dumps(r, default=float)}", flush=True)
+    print(f"wrote {args.out}")
+
+    dedup, admit, route = rows
+    failures = []
+    if dedup["dedup_ratio"] < 2.0:
+        failures.append(f"dedup_ratio {dedup['dedup_ratio']} < 2.0 for "
+                        f"{variants} variants")
+    if admit["warm_s"] >= admit["cold_s"]:
+        failures.append(f"warm admit ({admit['warm_s']}s) not faster than "
+                        f"cold ({admit['cold_s']}s)")
+    if not route["tokens_match"]:
+        failures.append("routed outputs diverged from dedicated sessions")
+    if route["evictions"] < 1:
+        failures.append("budget never forced an eviction")
+    if failures:
+        raise SystemExit("zoo bench invariants FAILED: "
+                         + "; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

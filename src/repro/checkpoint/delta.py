@@ -109,12 +109,44 @@ def _payload_name(d: str) -> str:
     return PARAMS_FILE
 
 
+# Per-process memo of verified file hashes.  Zoo admission resolves K
+# variant chains over the same keyframe; without this every resolve
+# re-reads and re-hashes the (large) base payload.  Keyed by file
+# *identity* — (device, inode, size, mtime_ns) — so hardlinked views of
+# one content-addressed object share an entry, while a rewritten base
+# (new inode, or same inode with changed size/mtime) misses the cache
+# and is re-hashed, preserving the substituted-base detection in
+# :func:`resolve_chain`.
+_HASH_CACHE: dict[tuple[int, int, int, int], str] = {}
+_HASH_STATS = {"hits": 0, "misses": 0}
+
+
+def hash_cache_stats() -> dict:
+    """Copy of the per-process sha256 memo counters (tests/benches)."""
+    return dict(_HASH_STATS)
+
+
+def clear_hash_cache() -> None:
+    _HASH_CACHE.clear()
+    _HASH_STATS["hits"] = 0
+    _HASH_STATS["misses"] = 0
+
+
 def _sha256_file(path: str) -> str:
+    st = os.stat(path)
+    key = (st.st_dev, st.st_ino, st.st_size, st.st_mtime_ns)
+    cached = _HASH_CACHE.get(key)
+    if cached is not None:
+        _HASH_STATS["hits"] += 1
+        return cached
+    _HASH_STATS["misses"] += 1
     h = hashlib.sha256()
     with open(path, "rb") as f:
         for block in iter(lambda: f.read(1 << 20), b""):
             h.update(block)
-    return h.hexdigest()
+    digest = h.hexdigest()
+    _HASH_CACHE[key] = digest
+    return digest
 
 
 def base_ref(root: str, step: int) -> dict:
@@ -313,6 +345,39 @@ def resolve_chain(directory: str, step: int | None = None,
         cur = int(base["step"])
     chain.reverse()
     return chain
+
+
+def chain_files(directory: str, step: int | None = None,
+                max_depth: int = DEFAULT_MAX_DEPTH) -> list[dict]:
+    """Per-link payload inventory of a step's base chain, base-first.
+
+    Each entry extends :func:`resolve_chain`'s link dict with a
+    ``"files"`` map: every file the link's step directory contributes —
+    manifest ``files`` entries (shards or the delta container) with
+    their recorded bytes/sha256, plus the manifest itself (hashed here)
+    or, for monolithic keyframes, the bare ``params.dcbc``.  This is the
+    unit a content-addressed store ingests: the sha256 values are the
+    object keys, so two variants chaining to one keyframe list identical
+    hashes for the shared shard files."""
+    chain = resolve_chain(directory, step, max_depth=max_depth)
+    out = []
+    for link in chain:
+        d = link["dir"]
+        manifest = link["manifest"]
+        files: dict[str, dict] = {}
+        if manifest is not None:
+            for fname, info in manifest.get("files", {}).items():
+                files[fname] = {"bytes": int(info["bytes"]),
+                                "sha256": str(info["sha256"])}
+            mpath = os.path.join(d, MANIFEST_NAME)
+            files[MANIFEST_NAME] = {"bytes": os.path.getsize(mpath),
+                                    "sha256": _sha256_file(mpath)}
+        else:
+            ppath = os.path.join(d, PARAMS_FILE)
+            files[PARAMS_FILE] = {"bytes": os.path.getsize(ppath),
+                                  "sha256": _sha256_file(ppath)}
+        out.append({**link, "files": files})
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -638,3 +638,18 @@ def manifest_total_values(manifest: dict) -> int:
         for shard in tinfo["shards"]:
             total += int(sum(shard.get("chunk_counts") or []))
     return total
+
+
+def manifest_files(manifest: dict) -> dict[str, dict]:
+    """The manifest's payload-file inventory: file name ->
+    ``{"bytes", "sha256"}``.  These hashes are content-address keys — a
+    dedup store ingests exactly this set (plus the manifest itself)."""
+    return {fname: {"bytes": int(info["bytes"]),
+                    "sha256": str(info["sha256"])}
+            for fname, info in manifest.get("files", {}).items()}
+
+
+def manifest_payload_bytes(manifest: dict) -> int:
+    """Total on-disk payload bytes the manifest pins (shards or delta
+    container; the manifest's own JSON is not counted)."""
+    return sum(f["bytes"] for f in manifest_files(manifest).values())

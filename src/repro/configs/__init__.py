@@ -1,5 +1,9 @@
-"""Assigned-architecture registry: ``get_config(arch_id)`` and
-``get_smoke_config(arch_id)`` plus shape/input-spec helpers."""
+"""Assigned-architecture registry.
+
+String-addressed lookup — ``configs.get(name)`` / ``configs.names()`` —
+so the model zoo, benches, and tests never import config modules by
+hand.  ``get_config``/``get_smoke_config`` remain as thin wrappers for
+older call sites."""
 
 from __future__ import annotations
 
@@ -35,11 +39,29 @@ def shapes_for(arch: str) -> list[str]:
     return out
 
 
+def names() -> list[str]:
+    """Registered architecture ids, in registry order."""
+    return list(ARCH_IDS)
+
+
+def get(name: str, *, smoke: bool = False) -> ModelConfig:
+    """Look up a registered architecture config by string id.
+
+    ``smoke=True`` returns the tiny CPU-runnable variant every config
+    module exposes alongside the paper-scale one.
+    """
+    try:
+        mod = importlib.import_module(f".{_MOD[name]}", __name__)
+    except KeyError:
+        raise KeyError(
+            f"unknown config {name!r}; available: {', '.join(ARCH_IDS)}"
+        ) from None
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
 def get_config(arch: str) -> ModelConfig:
-    mod = importlib.import_module(f".{_MOD[arch]}", __name__)
-    return mod.CONFIG
+    return get(arch)
 
 
 def get_smoke_config(arch: str) -> ModelConfig:
-    mod = importlib.import_module(f".{_MOD[arch]}", __name__)
-    return mod.SMOKE
+    return get(arch, smoke=True)

@@ -34,7 +34,8 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from ..configs import ARCH_IDS, SHAPES, get_config, shapes_for
+from .. import configs
+from ..configs import ARCH_IDS, SHAPES, shapes_for
 from ..distributed.compress import CompressionConfig
 from ..distributed.sharding import (DEFAULT_RULES, PREFILL_RULES,
                                     SERVE_RULES)
@@ -67,7 +68,7 @@ def _sds(shape, dtype):
 
 def input_specs(arch: str, shape_name: str) -> dict:
     """Model inputs for one cell, as ShapeDtypeStructs."""
-    cfg = get_config(arch)
+    cfg = configs.get(arch)
     seq, batch, kind = SHAPES[shape_name]
     out: dict = {}
     if kind == "train":
@@ -262,7 +263,7 @@ def _shardings(tree_specs, mesh):
 
 def lower_cell(arch: str, shape_name: str, mesh, cfg_overrides=None,
                int8_serving: bool = False):
-    cfg = get_config(arch)
+    cfg = configs.get(arch)
     if cfg_overrides:
         cfg = cfg.replace(**cfg_overrides)
     seq, batch, kind = SHAPES[shape_name]

@@ -21,7 +21,8 @@ import jax
 import numpy as np
 
 from .. import kernels
-from ..configs import ARCH_IDS, get_config, get_smoke_config
+from .. import configs
+from ..configs import ARCH_IDS
 from ..models.transformer import init_params
 from ..serve.backends import available_backends
 from ..serve.session import ServeConfig, ServeSession
@@ -52,7 +53,7 @@ def main():
                     help="ignore the persistent kernel tuning cache")
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = configs.get(args.arch, smoke=args.smoke)
     pol = cfg.kernels
     for pin in args.kernel_impl:
         op, _, impl = pin.partition("=")

@@ -17,7 +17,8 @@ import argparse
 import jax
 
 from ..checkpoint.manager import CheckpointConfig
-from ..configs import ARCH_IDS, get_config, get_smoke_config
+from .. import configs
+from ..configs import ARCH_IDS
 from ..distributed.compress import CompressionConfig
 from ..optim.adamw import AdamWConfig
 from ..train.loop import LoopConfig, train_loop
@@ -39,7 +40,7 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = configs.get(args.arch, smoke=args.smoke)
     if args.production_mesh:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
     else:

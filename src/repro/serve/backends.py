@@ -182,6 +182,65 @@ class WeightBackend:
             updates[hdr.name] = self._fold(hdr.name, rec, spec.dtype)
         return updates
 
+    def load_entries(self, cfg, entries: dict) -> dict:
+        """Build the serving tree from flat reconstructed quantized
+        entries (``checkpoint.delta.restore_levels`` output: name ->
+        ``QuantizedTensor`` | ``Q8Tensor`` | ndarray).
+
+        This is the cold-start path for a delta-chain *tip*: no single
+        container holds the frame — it only exists as keyframe + applied
+        residuals — so the chain is host-reconstructed first and each
+        entry folded through the same template-validated convert hook a
+        blob load uses (tracked levels included)."""
+        specs = _template_specs(cfg)
+        tree: dict = {}
+        seen: set = set()
+        for name, rec in entries.items():
+            spec = specs.get(name)
+            if spec is None:
+                continue                   # not part of this model
+            if tuple(rec.shape) != tuple(spec.shape):
+                raise ValueError(
+                    f"{name}: entry shape {tuple(rec.shape)} != model "
+                    f"{tuple(spec.shape)}")
+            seen.add(name)
+            _insert(tree, name, self._fold(name, rec, spec.dtype))
+        missing = sorted(set(specs) - seen)
+        if missing:
+            raise KeyError(
+                f"entries missing {len(missing)} model tensor(s), e.g. "
+                f"{missing[:3]}")
+        return tree
+
+    def warm_from(self, cfg, base_backend: "WeightBackend", base_params,
+                  steps) -> dict:
+        """Warm-start a delta variant from an already-resident base.
+
+        Instead of decoding the variant's whole chain from disk, copy
+        the base backend's tracked levels (safe to share: residual
+        decode builds *new* level arrays, it never mutates the base) and
+        apply only the variant's own delta steps — ``steps`` is the
+        base-exclusive suffix of its chain, in order.  ``base_params``
+        leaves are shared, not copied; patched tensors replace their
+        leaf in a fresh container structure.  Returns the variant's
+        serving tree; this backend's levels advance to the variant
+        frame."""
+        if not self.track_levels:
+            raise RuntimeError(
+                f"{self.name}: warm_from needs track_levels=True on the "
+                f"warming backend")
+        if not base_backend._levels:
+            raise RuntimeError(
+                f"{self.name}: base backend has no tracked levels to warm "
+                f"from — it must be built with track_levels=True and hold "
+                f"a loaded frame")
+        self._levels = dict(base_backend._levels)
+        tree = jax.tree_util.tree_map(lambda leaf: leaf, base_params)
+        for step in steps:
+            for name, leaf in self.apply_delta(cfg, step).items():
+                _insert(tree, name, leaf)
+        return tree
+
 
 # ---------------------------------------------------------------------------
 # Registry (mirrors compression.registry)
@@ -423,6 +482,56 @@ class ContainerBackend(WeightBackend):
 register_backend("bf16", Bf16Backend)
 register_backend("q8", Q8Backend)
 register_backend("container", ContainerBackend)
+
+
+# ---------------------------------------------------------------------------
+# Refcounted blob GC
+# ---------------------------------------------------------------------------
+
+class BlobGC:
+    """Refcounted key lifetimes over a drop callback.
+
+    Two serving-side stores share the same bug shape: a blob written for
+    a consumer that later goes away (a parked KV slot whose request is
+    cancelled, a content-addressed shard object whose last referencing
+    model is evicted) leaks unless something counts the holders.  This
+    helper owns the counting: ``hold(key)`` takes a reference,
+    ``release(key)`` gives one back and invokes ``drop(key)`` exactly
+    when the last holder leaves.  Unknown keys release as no-ops so
+    idempotent cleanup paths stay simple."""
+
+    def __init__(self, drop):
+        self._drop = drop
+        self._refs: dict[str, int] = {}
+
+    def hold(self, key: str) -> int:
+        self._refs[key] = self._refs.get(key, 0) + 1
+        return self._refs[key]
+
+    def release(self, key: str) -> bool:
+        """Give back one reference; returns True when this release was
+        the last one and the key's blob was dropped."""
+        n = self._refs.get(key)
+        if n is None:
+            return False
+        if n > 1:
+            self._refs[key] = n - 1
+            return False
+        del self._refs[key]
+        self._drop(key)
+        return True
+
+    def refs(self, key: str) -> int:
+        return self._refs.get(key, 0)
+
+    def live(self) -> list[str]:
+        return sorted(self._refs)
+
+    def clear(self) -> None:
+        """Drop every held key (store teardown)."""
+        for key in list(self._refs):
+            del self._refs[key]
+            self._drop(key)
 
 
 # ---------------------------------------------------------------------------

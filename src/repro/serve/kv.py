@@ -157,6 +157,12 @@ class PagedKV:
 
         self.codec = _make_codec(codec, step=cfg.kv_cache_delta)
         self.store = resolve_kv_store(cold_store)
+        # every cold blob (parked private pages, spilled shared pages) is
+        # held through the refcounted GC, so a request that goes away
+        # while parked drops its blob instead of leaking it in the store
+        # (dir-backed stores would otherwise keep the file until close())
+        from .backends import BlobGC
+        self._gc = BlobGC(self.store.drop)
         self.decode_opts = decode_opts or DecodeOptions()
         self._executor = (ThreadPoolExecutor(max_workers=restore_workers)
                           if restore_workers > 0 else None)
@@ -210,6 +216,7 @@ class PagedKV:
                     and self.page_refs[entry.pid] == 1):
                 blob = self._compress([entry.pid])
                 self.store.put("share:" + key, blob)
+                self._gc.hold("share:" + key)
                 self._deref(entry.pid)
                 entry.pid = None
                 self.stats["spills"] += 1
@@ -285,7 +292,7 @@ class PagedKV:
                 [pid] = self._alloc(1)        # this hold = the index's
                 self._restore(self._decompress(self.store.get("share:" + key)),
                               [pid])
-                self.store.drop("share:" + key)
+                self._gc.release("share:" + key)
                 entry.pid = pid
             self.page_refs[entry.pid] += 1    # the slot's hold
             self._index.move_to_end(key)
@@ -348,6 +355,7 @@ class PagedKV:
         self._park_seq += 1
         cold_key = f"park:{self._park_seq}"
         self.store.put(cold_key, self._compress(private))
+        self._gc.hold(cold_key)
         for pid in ids[:n_shared]:
             self._deref(pid)
         for pid in private:
@@ -381,7 +389,7 @@ class PagedKV:
         priv_ids = self._alloc(parked.n_private)
         assert priv_ids is not None
         self._restore(leaves, priv_ids)
-        self.store.drop(parked.cold_key)
+        self._gc.release(parked.cold_key)
         self._pages[slot] = ctx_ids + priv_ids
         self._keys[slot] = list(parked.prefix_keys)
         return True
@@ -392,6 +400,15 @@ class PagedKV:
         for pid in self._pages.pop(slot):
             self._deref(pid)
         self._keys.pop(slot, None)
+
+    def discard(self, parked: ParkedPages) -> None:
+        """A parked request will never resume (cancelled / finished while
+        parked): drop its cold blob now instead of leaking it until the
+        store closes.  Any in-flight prefetch result is discarded too."""
+        if parked._future is not None:
+            parked._future.cancel()
+            parked._future = None
+        self._gc.release(parked.cold_key)
 
     # -- accounting ---------------------------------------------------------
 
@@ -417,4 +434,5 @@ class PagedKV:
     def close(self) -> None:
         if self._executor is not None:
             self._executor.shutdown(wait=True)
+        self._gc.clear()
         self.store.close()

@@ -119,7 +119,8 @@ class ServeSession:
     """Continuous-batching serving session over a slot or paged KV cache."""
 
     def __init__(self, cfg: ModelConfig, weights, *, backend="bf16",
-                 serve_cfg: ServeConfig | None = None):
+                 serve_cfg: ServeConfig | None = None,
+                 preloaded: bool = False):
         serve_cfg = serve_cfg or ServeConfig()
         if serve_cfg.slots < 1 or serve_cfg.max_len < 1:
             raise ValueError(
@@ -135,7 +136,12 @@ class ServeSession:
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         self.backend = resolve_backend(backend)
-        self.params = self.backend.load(cfg, weights)
+        # preloaded: ``weights`` is already this backend's serving tree
+        # (a ModelZoo admission that decoded or warm-forked it) — loading
+        # again would double the cold-start cost and clobber the
+        # backend's tracked delta levels
+        self.params = weights if preloaded else self.backend.load(cfg,
+                                                                  weights)
 
         self._slots = [_Slot() for _ in range(serve_cfg.slots)]
         self._queue: deque[RequestHandle] = deque()
@@ -201,6 +207,15 @@ class ServeSession:
                        ) -> "ServeSession":
         """Build a session straight from a DCBC deployment artifact."""
         return cls(cfg, blob, backend=backend, serve_cfg=serve_cfg)
+
+    @classmethod
+    def from_loaded(cls, cfg: ModelConfig, params, *, backend,
+                    serve_cfg: ServeConfig | None = None) -> "ServeSession":
+        """Wrap an already-built serving tree.  ``backend`` must be the
+        instance that produced ``params`` (its tracked levels, if any,
+        describe exactly this tree), so delta swaps keep working."""
+        return cls(cfg, params, backend=backend, serve_cfg=serve_cfg,
+                   preloaded=True)
 
     # -- client API ----------------------------------------------------------
 
@@ -270,6 +285,43 @@ class ServeSession:
             raise ValueError(f"request {handle.id} is not parked")
         self._kv.prefetch(rec[1])
         self._resume_q.append(rec)
+
+    def cancel(self, handle: RequestHandle) -> bool:
+        """Abort a request wherever it lives — queued, active, manually
+        parked, or waiting to resume — releasing its slot/pages and, for
+        parked requests, dropping the cold-store blob (a dir-backed
+        store would otherwise keep the file until ``close()``).  Already
+        finished requests are left alone (returns False)."""
+        if handle.done:
+            return False
+        try:
+            self._queue.remove(handle)
+            return self._finish_cancelled(handle)
+        except ValueError:
+            pass
+        if self._paged:
+            rec = self._parked.pop(handle.id, None)
+            if rec is not None:
+                self._kv.discard(rec[1])
+                return self._finish_cancelled(handle)
+            for i, rec in enumerate(self._resume_q):
+                if rec[0] is handle:
+                    del self._resume_q[i]
+                    self._kv.discard(rec[1])
+                    return self._finish_cancelled(handle)
+        for i, s in enumerate(self._slots):
+            if s.req is handle:
+                if self._paged:
+                    self._kv.release(i)
+                s.clear()
+                return self._finish_cancelled(handle)
+        raise ValueError(f"request {handle.id} is not known to this session")
+
+    def _finish_cancelled(self, handle: RequestHandle) -> bool:
+        handle.done = True
+        handle.finish_reason = "cancelled"
+        self._rngs.pop(handle.id, None)
+        return True
 
     def _slot_of(self, handle: RequestHandle) -> int:
         for i, s in enumerate(self._slots):
