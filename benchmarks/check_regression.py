@@ -5,7 +5,10 @@ committed baselines and fails the job when any smoke metric regresses by
 more than ``--max-slowdown`` (default 30%).  Smoke metrics are the
 headline throughput/latency numbers of each bench:
 
-* ``BENCH_serve.json``       — per-backend ``total_tok_s``   (higher better)
+* ``BENCH_serve.json``       — per-backend ``total_tok_s``   (higher better;
+  hard invariants on the compressed-resident rows: the q8 backend must
+  serve at ``hbm_ratio <= 0.35`` of the bf16-resident weight bytes and
+  stay greedy token-identical to it — ``tokens_match``)
 * ``BENCH_cold_start.json``  — lane-engine ``values_per_s``  (higher better;
   the serial-scalar honesty rows are skipped — they are the baseline being
   beaten, not a product path)
@@ -114,7 +117,26 @@ def check_invariants(fname: str, report: dict) -> list[str]:
     """Hard correctness-adjacent invariants of the fresh run (no baseline
     needed)."""
     errors = []
-    if fname == "BENCH_shard_restore.json":
+    if fname == "BENCH_serve.json":
+        for r in report.get("rows", []):
+            if r["backend"] != "q8":
+                continue
+            if "hbm_ratio" not in r:
+                errors.append(
+                    "serve: the q8 row carries no hbm_ratio — the "
+                    "compressed-resident accounting went unexercised")
+                continue
+            if r["hbm_ratio"] > 0.35:
+                errors.append(
+                    f"serve: q8-resident weights are {r['hbm_ratio']:.3f}x "
+                    f"the bf16-resident bytes — compressed-resident serving "
+                    f"must stay <= 0.35x")
+            if not r.get("tokens_match"):
+                errors.append(
+                    "serve: q8-resident greedy outputs diverged from the "
+                    "bf16-resident path — the fused dequant matmuls must "
+                    "stay token-identical")
+    elif fname == "BENCH_shard_restore.json":
         sub = [r for r in report.get("rows", [])
                if r["path"].startswith("manifest_submesh")]
         for r in sub:

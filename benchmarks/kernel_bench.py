@@ -130,11 +130,13 @@ def main():
     if args.smoke:
         dm_shapes = [(1, 256, 256), (4, 256, 256), (8, 256, 256),
                      (128, 256, 256)]
+        dmg_shapes = [(4, 8, 256, 256), (8, 16, 128, 256)]
         fa_shapes = [(1, 64, 64, 2, 2, 32)]
         rd_shapes = [(1 << 12,)]
     else:
         dm_shapes = [(1, 2048, 1024), (8, 2048, 1024), (256, 2048, 1024),
                      (1024, 2048, 1024)]
+        dmg_shapes = [(8, 64, 2048, 1024), (64, 32, 1024, 512)]
         fa_shapes = [(2, 512, 512, 8, 4, 64), (1, 2048, 2048, 8, 4, 128)]
         rd_shapes = [(1 << 16,), (1 << 20,)]
 
@@ -143,6 +145,9 @@ def main():
         "dequant_matmul": tune.autotune(
             "dequant_matmul", dm_shapes, impl=tune_impl,
             repeats=args.repeats, force=True),
+        "dequant_matmul_grouped": tune.autotune(
+            "dequant_matmul_grouped", dmg_shapes, impl=tune_impl,
+            repeats=max(args.repeats - 1, 1), force=True),
         "flash_attention": tune.autotune(
             "flash_attention", fa_shapes, impl=tune_impl,
             repeats=max(args.repeats - 1, 1), force=True),

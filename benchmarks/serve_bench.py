@@ -6,6 +6,14 @@ so CI accumulates a perf trajectory.  Numbers are host-CPU smoke-scale
 (regression tracking, not roofline claims; see the dry-run analysis for
 TPU projections).
 
+Compressed-resident serving rows: ``bf16_dequant`` serves the *quantized*
+model dequantized at admission (the bf16-resident baseline with the same
+numerics), ``q8`` serves it q8-resident (int8 levels + scales stay in HBM,
+every matmul through the fused dequant kernels).  Each row carries its
+measured resident weight bytes; the q8/container rows add ``hbm_ratio``
+(vs bf16_dequant) and ``tokens_match`` (greedy identity vs bf16_dequant) —
+both gated as hard invariants by ``benchmarks.check_regression``.
+
 Run: PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
 """
 
@@ -18,8 +26,17 @@ import time
 import numpy as np
 
 
+def _weight_bytes(params) -> int:
+    """Resident bytes of the loaded serving tree (q8 leaves count their
+    int8 levels at 1 B/param + f32 scales — the whole point)."""
+    import jax
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(params))
+
+
 def bench_backend(cfg, weights, backend: str, *, slots: int,
-                  prompt_len: int, steps: int, requests: int) -> dict:
+                  prompt_len: int, steps: int, requests: int,
+                  label: str | None = None) -> dict:
     import jax
     from repro.serve.session import ServeConfig, ServeSession
 
@@ -58,7 +75,7 @@ def bench_backend(cfg, weights, backend: str, *, slots: int,
     gen_tokens = sum(len(h.tokens) for h in handles) - first_tokens
     total = t_prefill_phase + t_decode_phase
     return {
-        "backend": backend,
+        "backend": label or backend,
         "slots": slots,
         "requests": requests,
         "prompt_len": prompt_len,
@@ -71,6 +88,8 @@ def bench_backend(cfg, weights, backend: str, *, slots: int,
         "decode_tok_s": round(gen_tokens / max(t_decode_phase, 1e-9), 1),
         "total_tok_s": round((prompt_tokens + first_tokens + gen_tokens)
                              / max(total, 1e-9), 1),
+        "weight_hbm_bytes": _weight_bytes(session.params),
+        "_tokens": [[int(t) for t in h.tokens] for h in handles],
     }
 
 
@@ -81,24 +100,41 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     import jax
+    import jax.numpy as jnp
     from repro import compression
     from repro import configs
     from repro.models.transformer import init_params
+    from repro.serve.quantized import (dequant_tree,
+                                       quantize_params_for_serving)
 
     cfg = configs.get("llama3-8b", smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
     blob = compression.get("serve-q8").compress(params).blob
+    # bf16-resident baseline with q8 numerics: same quantized weights,
+    # dequantized once at admission (what serving did before the fused
+    # compressed-resident path)
+    deq = dequant_tree(quantize_params_for_serving(params),
+                       jnp.dtype(cfg.param_dtype))
 
     steps = 16 if args.fast else 48
     requests = 6 if args.fast else 12
+    kw = dict(slots=requests, prompt_len=16, steps=steps, requests=requests)
     rows = [
-        bench_backend(cfg, params, "bf16", slots=requests, prompt_len=16,
-                      steps=steps, requests=requests),
-        bench_backend(cfg, params, "q8", slots=requests, prompt_len=16,
-                      steps=steps, requests=requests),
-        bench_backend(cfg, blob, "container", slots=requests, prompt_len=16,
-                      steps=steps, requests=requests),
+        bench_backend(cfg, params, "bf16", **kw),
+        bench_backend(cfg, deq, "bf16", label="bf16_dequant", **kw),
+        bench_backend(cfg, params, "q8", **kw),
+        bench_backend(cfg, blob, "container", **kw),
     ]
+    base = next(r for r in rows if r["backend"] == "bf16_dequant")
+    for r in rows:
+        if r["backend"] in ("q8", "container"):
+            r["hbm_ratio"] = round(
+                r["weight_hbm_bytes"] / base["weight_hbm_bytes"], 4)
+            r["tokens_match"] = bool(r["_tokens"] == base["_tokens"])
+            r["decode_tok_s_ratio"] = round(
+                r["decode_tok_s"] / max(base["decode_tok_s"], 1e-9), 4)
+    for r in rows:
+        del r["_tokens"]
     report = {"bench": "serve_session_smoke", "arch": cfg.name,
               "fast": bool(args.fast), "rows": rows}
     with open(args.out, "w") as f:

@@ -12,11 +12,12 @@ from . import registry, tune  # noqa: F401  (registry first: specs need it)
 from .registry import (  # noqa: F401
     DEFAULT_POLICY, BoundOp, DispatchPlan, Impl, KernelDispatchError,
     KernelPolicy, OpSpec, available_ops, clear_dispatch_report,
-    dispatch_report, get, register_op, spec)
+    dispatch_report, get, record_event, register_op, spec)
 from .tune import TuningCache, autotune  # noqa: F401
 
 # importing the subpackages registers their OpSpecs
-from .dequant_matmul import dequant_matmul  # noqa: F401
+from .dequant_matmul import (  # noqa: F401
+    dequant_matmul, dequant_matmul_grouped)
 from .embed_lookup import embed_lookup_q8, is_q8_leaf  # noqa: F401
 from .flash_attention import flash_attention  # noqa: F401
 from .rd_quant import pack_rate_params, rd_quant  # noqa: F401

@@ -53,3 +53,41 @@ def dequant_matmul_pallas(x: jnp.ndarray, w_q: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(x, w_q, scale.reshape(1, -1))
+
+
+def _dequant_matmul_grouped_kernel(x_ref, wq_ref, scale_ref, out_ref, *,
+                                   n_k: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[0].astype(jnp.float32)
+    w = (wq_ref[0].astype(jnp.float32)
+         * scale_ref[0, 0, :].astype(jnp.float32))
+    out_ref[0] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def dequant_matmul_grouped_pallas(x: jnp.ndarray, w_q: jnp.ndarray,
+                                  scale: jnp.ndarray, *, bm: int = BM,
+                                  bn: int = BN, bk: int = BK,
+                                  interpret: bool = False) -> jnp.ndarray:
+    """Grouped-expert variant: x (E, M, K), w_q (E, K, N) int8,
+    scale (E, N) f32 -> (E, M, N) f32.  One expert per leading grid step;
+    within an expert the tiling matches :func:`dequant_matmul_pallas`
+    (K innermost, f32 accumulator tile resident in VMEM).  M, K, N must
+    be multiples of the block sizes (ops.py pads)."""
+    e, m, k = x.shape
+    n = w_q.shape[2]
+    grid = (e, m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_dequant_matmul_grouped_kernel, n_k=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, kk: (g, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, kk: (g, kk, j)),
+            pl.BlockSpec((1, 1, bn), lambda g, i, j, kk: (g, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, kk: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w_q, scale.reshape(e, 1, n))

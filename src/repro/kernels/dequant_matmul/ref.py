@@ -15,3 +15,19 @@ def dequant_matmul_ref(x: jnp.ndarray, w_q: jnp.ndarray,
     w = w_q.astype(jnp.float32) * scale[None, :].astype(jnp.float32)
     return jnp.dot(x.astype(jnp.float32), w,
                    preferred_element_type=jnp.float32)
+
+
+def dequant_matmul_grouped_ref(x: jnp.ndarray, w_q: jnp.ndarray,
+                               scale: jnp.ndarray) -> jnp.ndarray:
+    """Grouped-expert oracle: x (E, M, K) @ dequant(w_q (E, K, N) int8,
+    scale (E, N) | (N,)) -> (E, M, N), one independent matmul per expert.
+
+    A (N,)-shaped scale is the stacked-MoE wire format (one per-output-
+    channel Delta shared across the layer's experts — see
+    ``compression.quantizers.quantize_leaf``); it broadcasts over E.
+    """
+    if scale.ndim == 1:
+        scale = scale[None, :]
+    w = w_q.astype(jnp.float32) * scale[:, None, :].astype(jnp.float32)
+    return jnp.einsum("emk,ekn->emn", x.astype(jnp.float32), w,
+                      preferred_element_type=jnp.float32)

@@ -180,6 +180,23 @@ def clear_dispatch_report() -> None:
     _REPORT.clear()
 
 
+def record_event(*, op: str, platform: str, impl: str, reason: str,
+                 requested: str | None = None, kind: str = "event") -> None:
+    """Append a non-dispatch event to the report stream.
+
+    Dispatch itself records constraint-driven fallbacks automatically;
+    this hook is for adjacent decisions that must be just as loud — a
+    tile clamp at kernel dispatch (``kind="tile_clamp"``), a loop-body
+    dequantize of a tensor the fused q8 path can't take
+    (``kind="loop_dequant"``).  Records share the fallback schema
+    ({op, platform, requested, impl, reason}) plus ``kind``, so existing
+    ``dispatch_report()`` consumers keep working and new ones can filter
+    by kind.  Call sites fire at trace time (inside ``jax.jit`` tracing),
+    so a recorded event costs nothing per executed step."""
+    _REPORT.append({"op": op, "platform": platform, "requested": requested,
+                    "impl": impl, "reason": reason, "kind": kind})
+
+
 # ---------------------------------------------------------------------------
 # Dispatch
 # ---------------------------------------------------------------------------
@@ -270,7 +287,7 @@ class BoundOp:
             _REPORT.append({
                 "op": plan.op, "platform": plan.platform,
                 "requested": plan.requested, "impl": plan.impl,
-                "reason": plan.fallback_reason,
+                "reason": plan.fallback_reason, "kind": "fallback",
             })
             if (policy is not None and policy.strict
                     and plan.requested is not None):

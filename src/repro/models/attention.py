@@ -17,7 +17,7 @@ from jax import lax
 from .. import kernels as _kernels
 from ..distributed.sharding import constrain
 from ..serve.quantized import dequant_cache_value, quantize_cache_value
-from .layers import apply_m_rope, apply_rope, rms_norm
+from .layers import apply_m_rope, apply_rope, q8_einsum, rms_norm
 
 
 def _cache_store(x, cache_arr, delta):
@@ -131,9 +131,9 @@ def gqa_attention(x, p, cfg, positions, *, cache=None, cache_pos=None,
     """
     b, s, _ = x.shape
     h, g, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = jnp.einsum("bsd,dk->bsk", x, p["wq"])
-    k = jnp.einsum("bsd,dk->bsk", x, p["wk"])
-    v = jnp.einsum("bsd,dk->bsk", x, p["wv"])
+    q = q8_einsum(x, p["wq"], policy=cfg.kernels)
+    k = q8_einsum(x, p["wk"], policy=cfg.kernels)
+    v = q8_einsum(x, p["wv"], policy=cfg.kernels)
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = constrain(q.reshape(b, s, h, dh), "batch", "seq", "heads", None)
@@ -177,7 +177,7 @@ def gqa_attention(x, p, cfg, positions, *, cache=None, cache_pos=None,
 
     out = attend(q, k, v, positions, policy=cfg.kernels,
                  kv_block=cfg.attn_kv_block, kv_len=kv_len)
-    out = jnp.einsum("bsk,kd->bsd", out.reshape(b, s, h * dh), p["wo"])
+    out = q8_einsum(out.reshape(b, s, h * dh), p["wo"], policy=cfg.kernels)
     return out, new_cache
 
 
@@ -196,19 +196,20 @@ def mla_attention(x, p, cfg, positions, *, cache=None, cache_pos=None,
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
 
     if cfg.q_lora_rank:
-        ql = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"],
-                      cfg.norm_eps)
-        q = jnp.einsum("bsr,rk->bsk", ql, p["w_uq"])
+        ql = rms_norm(q8_einsum(x, p["w_dq"], policy=cfg.kernels),
+                      p["q_norm"], cfg.norm_eps)
+        q = q8_einsum(ql, p["w_uq"], policy=cfg.kernels)
     else:
-        q = jnp.einsum("bsd,dk->bsk", x, p["w_uq"])
+        q = q8_einsum(x, p["w_uq"], policy=cfg.kernels)
     q = q.reshape(b, s, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
 
-    ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"],
-                   cfg.norm_eps)
-    kr = apply_rope(jnp.einsum("bsd,dr->bsr", x, p["w_kr"])[:, :, None, :],
-                    positions, cfg.rope_theta)[:, :, 0, :]
+    ckv = rms_norm(q8_einsum(x, p["w_dkv"], policy=cfg.kernels),
+                   p["kv_norm"], cfg.norm_eps)
+    kr = apply_rope(
+        q8_einsum(x, p["w_kr"], policy=cfg.kernels)[:, :, None, :],
+        positions, cfg.rope_theta)[:, :, 0, :]
 
     new_cache = None
     kv_len = None
@@ -237,13 +238,14 @@ def mla_attention(x, p, cfg, positions, *, cache=None, cache_pos=None,
         new_cache = {"ckv": ckv_all, "kr": kr_all}
 
     # up-project latents (recompute path; absorbed path is a perf option)
-    k_nope = jnp.einsum("bsr,rk->bsk", ckv, p["w_uk"]).reshape(b, -1, h, dn)
-    vv = jnp.einsum("bsr,rk->bsk", ckv, p["w_uv"]).reshape(b, -1, h, dv)
+    k_nope = q8_einsum(ckv, p["w_uk"],
+                       policy=cfg.kernels).reshape(b, -1, h, dn)
+    vv = q8_einsum(ckv, p["w_uv"], policy=cfg.kernels).reshape(b, -1, h, dv)
     k_full = jnp.concatenate(
         [k_nope, jnp.broadcast_to(kr[:, :, None, :],
                                   (*kr.shape[:2], h, dr))], axis=-1)
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
     out = attend(q_full, k_full, vv, positions, policy=cfg.kernels,
                  kv_block=cfg.attn_kv_block, kv_len=kv_len)
-    out = jnp.einsum("bsk,kd->bsd", out.reshape(b, s, h * dv), p["wo"])
+    out = q8_einsum(out.reshape(b, s, h * dv), p["wo"], policy=cfg.kernels)
     return out, new_cache

@@ -1,9 +1,35 @@
-"""Shared layer primitives: norms, activations, RoPE / M-RoPE, MLP."""
+"""Shared layer primitives: norms, activations, RoPE / M-RoPE, MLP.
+
+:func:`q8_einsum` is the compressed-resident projection: any ``x @ w``
+whose weight may be a serving-quantized ``{"q8","q8s"}`` leaf goes through
+it, so int8 levels stay resident in HBM and dequantize inside the
+``dequant_matmul`` kernel instead of re-materializing full-precision
+weights per step.  Dense weights take the exact pre-existing einsum.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from .. import kernels as _kernels
+
+
+def q8_einsum(x: jnp.ndarray, w, *, policy=None) -> jnp.ndarray:
+    """x (..., K) @ w -> (..., N) in ``x.dtype``.
+
+    ``w`` is either a dense (K, N) array (plain einsum, unchanged math) or
+    a q8 leaf {"q8": (K, N) int8, "q8s": (N,) f32} — routed through
+    ``kernels.get("dequant_matmul")`` (impl/tiles per ``policy``, normally
+    ``cfg.kernels``), which computes in f32 and is cast back to
+    ``x.dtype``.  With f32 activations this is bit-identical to
+    dequantize-then-einsum; see docs/kernels_api.md for eligibility.
+    """
+    if _kernels.is_q8_leaf(w):
+        out = _kernels.get("dequant_matmul")(x, w["q8"], w["q8s"],
+                                             policy=policy)
+        return out.astype(x.dtype)
+    return jnp.einsum("...k,kn->...n", x, w)
 
 
 def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
@@ -22,10 +48,11 @@ def activation(x: jnp.ndarray, kind: str) -> jnp.ndarray:
     raise ValueError(kind)
 
 
-def swiglu_mlp(x: jnp.ndarray, p: dict, act: str) -> jnp.ndarray:
-    gate = activation(jnp.einsum("...d,df->...f", x, p["w_gate"]), act)
-    up = jnp.einsum("...d,df->...f", x, p["w_up"])
-    return jnp.einsum("...f,fd->...d", gate * up, p["w_down"])
+def swiglu_mlp(x: jnp.ndarray, p: dict, act: str,
+               policy=None) -> jnp.ndarray:
+    gate = activation(q8_einsum(x, p["w_gate"], policy=policy), act)
+    up = q8_einsum(x, p["w_up"], policy=policy)
+    return q8_einsum(gate * up, p["w_down"], policy=policy)
 
 
 # ---------------------------------------------------------------------------

@@ -27,8 +27,30 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .. import kernels as _kernels
 from ..distributed.sharding import constrain
-from .layers import activation
+from .layers import activation, q8_einsum
+
+
+def _expert_einsum(buf: jnp.ndarray, w, *, policy=None) -> jnp.ndarray:
+    """Per-expert matmul buf (G, E, C, K) @ w (E, K, N) -> (G, E, C, N).
+
+    ``w`` is either the dense stacked expert bank (plain einsum) or a q8
+    leaf {"q8": (E, K, N) int8, "q8s": (E, N) | (N,) f32} — the (N,) form
+    is the stacked-MoE wire format, one per-channel Delta shared across
+    the layer's experts.  The q8 path flattens the group/capacity dims to
+    the grouped kernel's per-expert M and routes through
+    ``kernels.get("dequant_matmul_grouped")`` so the expert bank stays
+    int8-resident in HBM.
+    """
+    if _kernels.is_q8_leaf(w):
+        g, e, c, k = buf.shape
+        xg = buf.transpose(1, 0, 2, 3).reshape(e, g * c, k)
+        out = _kernels.get("dequant_matmul_grouped")(
+            xg, w["q8"], w["q8s"], policy=policy)
+        return (out.reshape(e, g, c, -1).transpose(1, 0, 2, 3)
+                .astype(buf.dtype))
+    return jnp.einsum("gecd,edf->gecf", buf, w)
 
 
 def moe_capacity(group_tokens: int, cfg) -> int:
@@ -42,8 +64,12 @@ def moe_block(x: jnp.ndarray, p: dict, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
     g, s, d = x.shape
     e, k = cfg.num_experts, cfg.top_k
 
-    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32),
-                        p["router"].astype(jnp.float32))
+    if _kernels.is_q8_leaf(p["router"]):
+        logits = q8_einsum(x.astype(jnp.float32), p["router"],
+                           policy=cfg.kernels)
+    else:
+        logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32),
+                            p["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)
     topw, topi = lax.top_k(probs, k)                     # (g, s, k)
     topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
@@ -69,10 +95,10 @@ def moe_block(x: jnp.ndarray, p: dict, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
 
     # routed experts: stacked SwiGLU on the EP-sharded buffer
     buf = constrain(buf, "moe_group", "expert", None, None)
-    gate = activation(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"]),
+    gate = activation(_expert_einsum(buf, p["w_gate"], policy=cfg.kernels),
                       cfg.act)
-    up = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
-    hbuf = jnp.einsum("gecf,efd->gecd", gate * up, p["w_down"])
+    up = _expert_einsum(buf, p["w_up"], policy=cfg.kernels)
+    hbuf = _expert_einsum(gate * up, p["w_down"], policy=cfg.kernels)
     hbuf = constrain(hbuf, "moe_group", "expert", None, None)
 
     gather = jax.vmap(lambda hb, ei, ci: hb[ei, ci])
@@ -84,9 +110,10 @@ def moe_block(x: jnp.ndarray, p: dict, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
 
     # shared experts: fused dense SwiGLU of width num_shared * moe_d_ff
     if cfg.num_shared_experts:
-        sg = activation(jnp.einsum("gsd,df->gsf", x, p["sh_gate"]), cfg.act)
-        su = jnp.einsum("gsd,df->gsf", x, p["sh_up"])
-        out = out + jnp.einsum("gsf,fd->gsd", sg * su, p["sh_down"])
+        sg = activation(q8_einsum(x, p["sh_gate"], policy=cfg.kernels),
+                        cfg.act)
+        su = q8_einsum(x, p["sh_up"], policy=cfg.kernels)
+        out = out + q8_einsum(sg * su, p["sh_down"], policy=cfg.kernels)
 
     # Switch-style load-balance aux loss: E * sum_e f_e * P_e
     me = jnp.mean(probs, axis=(0, 1))                     # (e,)

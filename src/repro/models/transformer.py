@@ -23,12 +23,63 @@ from jax import lax
 
 from .. import kernels as _kernels
 from ..distributed.sharding import constrain
-from ..serve.quantized import dequant_leaf, dequant_tree
+from ..serve.quantized import dequant_leaf, is_q8
 from .attention import gqa_attention, mla_attention
 from .config import ModelConfig
 from .layers import rms_norm, swiglu_mlp
 from .moe import moe_block
 from .ssm import mamba2_mixer
+
+# q8 leaves the fused dequant_matmul path consumes in place: attention
+# projections (gqa + mla), dense/shared MLP projections, MoE router and
+# stacked expert banks.  Anything else (ssm mixer tensors, conv kernels,
+# biases that happened to quantize) falls back to a loop-body dequantize —
+# explicitly, reported once per tensor via dispatch_report().
+_FUSED_ELIGIBLE = frozenset({
+    "wq", "wk", "wv", "wo",                       # gqa projections
+    "w_dq", "w_uq", "w_dkv", "w_kr", "w_uk", "w_uv",   # mla projections
+    "w_gate", "w_up", "w_down",                   # dense MLP / expert banks
+    "sh_gate", "sh_up", "sh_down", "router",      # MoE shared + router
+})
+
+# (tensor name, reason) pairs already reported — loop-body dequant is a
+# per-tensor decision, so report it once, not once per compile per step.
+_reported_loop_dequant: set = set()
+
+
+def _record_loop_dequant(name: str, reason: str) -> None:
+    if name in _reported_loop_dequant:
+        return
+    _reported_loop_dequant.add(name)
+    _kernels.record_event(
+        op="dequant_matmul", platform=jax.default_backend(),
+        impl="loop_dequant", reason=f"{name}: {reason}",
+        kind="loop_dequant")
+
+
+def _fused_layer_params(lp, dt):
+    """Per-layer param pass inside the scan body.
+
+    Eligible q8 leaves pass through *intact* — their consumers
+    (:func:`~repro.models.layers.q8_einsum`, ``_expert_einsum``) feed the
+    int8 levels straight to the fused ``dequant_matmul`` kernels, so the
+    stacked parameters are only ever read from HBM as int8.  Ineligible q8
+    leaves are dequantized here (the old loop-body path), recorded once per
+    tensor with ``kind="loop_dequant"`` so the fallback is loud instead of
+    a silent per-step bf16 re-materialization."""
+    def visit(path, leaf):
+        if not is_q8(leaf):
+            return leaf
+        name = next((p.key for p in reversed(path)
+                     if isinstance(p, jax.tree_util.DictKey)), "<leaf>")
+        if name in _FUSED_ELIGIBLE:
+            return leaf
+        _record_loop_dequant(
+            name, "no fused q8 consumer for this tensor (not an "
+            "attention/MLP/MoE projection)")
+        return dequant_leaf(leaf, dt)
+
+    return jax.tree_util.tree_map_with_path(visit, lp, is_leaf=is_q8)
 
 
 def _norm(x, p, cfg):
@@ -231,7 +282,8 @@ def _dense_block(x, lp, cfg, positions, pos3d, cache, cache_pos,
                                   cfg, positions, pos3d, cache, cache_pos,
                                   cache_pages)
     x = constrain(x + a, "batch", "seq", None)
-    x = x + swiglu_mlp(_norm(x, lp["mlp_norm"], cfg), lp["mlp"], cfg.act)
+    x = x + swiglu_mlp(_norm(x, lp["mlp_norm"], cfg), lp["mlp"], cfg.act,
+                       policy=cfg.kernels)
     return constrain(x, "batch", "seq", None), new_cache, \
         jnp.zeros((), jnp.float32)
 
@@ -285,7 +337,7 @@ def _scan_stack(x, stacked, block, cfg, positions, pos3d, caches, cache_pos,
     if caches is None:
         def f(carry, lp):
             h, aux = carry
-            h2, _, a = body(h, dequant_tree(lp, dt), cache=None)
+            h2, _, a = body(h, _fused_layer_params(lp, dt), cache=None)
             return (h2, aux + a), None
         (x, aux), _ = lax.scan(f, (x, jnp.zeros((), jnp.float32)), stacked)
         return x, None, aux
@@ -293,7 +345,7 @@ def _scan_stack(x, stacked, block, cfg, positions, pos3d, caches, cache_pos,
     def f(carry, xs):
         h, aux = carry
         lp, cache_l = xs
-        h2, newc, a = body(h, dequant_tree(lp, dt), cache=cache_l)
+        h2, newc, a = body(h, _fused_layer_params(lp, dt), cache=cache_l)
         return (h2, aux + a), newc
     (x, aux), new_caches = lax.scan(
         f, (x, jnp.zeros((), jnp.float32)), (stacked, caches))
@@ -309,7 +361,7 @@ def _hybrid_scan(x, params, cfg, positions, pos3d, caches, cache_pos):
     stacked = jax.tree.map(
         lambda a: a.reshape(ng, per, *a.shape[1:]), params["layers"],
         is_leaf=lambda a: hasattr(a, "shape"))
-    shared = dequant_tree(params["shared"], dt)
+    shared = _fused_layer_params(params["shared"], dt)
     ssm_body = _maybe_remat(
         functools.partial(_ssm_block, cfg=cfg, positions=positions,
                           pos3d=pos3d, cache_pos=cache_pos), cfg)
@@ -326,7 +378,7 @@ def _hybrid_scan(x, params, cfg, positions, pos3d, caches, cache_pos):
             lps = xs
 
             def inner(hh, lp):
-                h2, _, _ = ssm_body(hh, dequant_tree(lp, dt), cache=None)
+                h2, _, _ = ssm_body(hh, _fused_layer_params(lp, dt), cache=None)
                 return h2, None
             h, _ = lax.scan(inner, h, lps)
             h, _, _ = attn_body(h, shared, cache=None)
@@ -335,7 +387,7 @@ def _hybrid_scan(x, params, cfg, positions, pos3d, caches, cache_pos):
 
         def inner(hh, xs_i):
             lp, c = xs_i
-            h2, nc, _ = ssm_body(hh, dequant_tree(lp, dt), cache=c)
+            h2, nc, _ = ssm_body(hh, _fused_layer_params(lp, dt), cache=c)
             return h2, nc
         h, new_ssm = lax.scan(inner, h, (lps, ssm_c))
         h, new_attn, _ = attn_body(h, shared, cache=attn_c)
@@ -454,6 +506,13 @@ def _head_logits(x, params, cfg: ModelConfig):
             x.reshape(bsz * s, d).astype(jnp.float32),
             head_leaf["q8"], head_leaf["q8s"], policy=cfg.kernels)
         return out.reshape(bsz, s, -1)
+    if cfg.tie_embeddings and is_q8(head_leaf):
+        # transposing the (V, d) embedding puts the per-vocab-row scales on
+        # the *input* dim — the kernel contract wants per-output-channel
+        # scales, so the tied head is fused-ineligible by design
+        _record_loop_dequant(
+            "embed.T (tied head)", "tied embedding head transposes "
+            "per-vocab-row scales onto the contraction dim")
     head = (dequant_leaf(head_leaf, jnp.float32).T if cfg.tie_embeddings
             else dequant_leaf(head_leaf, jnp.float32))
     return jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),

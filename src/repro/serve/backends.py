@@ -82,6 +82,11 @@ class WeightBackend:
     """
 
     name = "?"
+    # True when the resident tree holds serve-quantized tensors as
+    # {"q8","q8s"} leaves (int8 levels + f32 scales) — admission
+    # accounting (zoo.model_resident_bytes) sizes those leaves at int8
+    # width instead of the param dtype
+    q8_resident = False
 
     def __init__(self, decode: DecodeOptions | None = None, mesh=None,
                  track_levels: bool = False):
@@ -424,11 +429,14 @@ class Bf16Backend(WeightBackend):
 class Q8Backend(WeightBackend):
     """In-memory fixed-point serving: matmul weights become
     ``{"q8","q8s"}`` leaves (per-out-channel int8 + Delta), which the
-    model dequantizes in-core after int8 HBM reads (the
-    ``dequant_matmul`` head and ``embed_lookup_q8`` gather registry ops,
-    in-scan ``dequant_tree``)."""
+    model dequantizes in-core after int8 HBM reads: every attention /
+    MLP / MoE projection routes through the fused ``dequant_matmul`` /
+    ``dequant_matmul_grouped`` registry ops and the embed gather through
+    ``embed_lookup_q8`` — see docs/serving_api.md "Compressed-resident
+    serving"."""
 
     name = "q8"
+    q8_resident = True
 
     def _convert(self, name, rec, dt):
         if isinstance(rec, Q8Tensor):

@@ -42,7 +42,12 @@ def quantize_params_for_serving(params):
 
 def dequant_leaf(leaf, dtype):
     if is_q8(leaf):
-        return (leaf["q8"].astype(jnp.float32) * leaf["q8s"]).astype(dtype)
+        q, s = leaf["q8"], leaf["q8s"]
+        if s.ndim == 2 and q.ndim > 2:
+            # stacked leaf: scales are (L, out) for levels (L, ..., out)
+            s = s.reshape((s.shape[0],) + (1,) * (q.ndim - 2)
+                          + (s.shape[1],))
+        return (q.astype(jnp.float32) * s).astype(dtype)
     return leaf
 
 

@@ -219,14 +219,38 @@ class ShardStore:
 # Model zoo: registry + resident set + admission policy
 # ---------------------------------------------------------------------------
 
-def model_resident_bytes(cfg, serve_cfg: ServeConfig) -> int:
-    """HBM a resident model costs: full-precision weight bytes (via
-    ``jax.eval_shape`` — conservative for quantized backends) plus its
-    session's device KV (slot cache, or the paged pool)."""
+def model_resident_bytes(cfg, serve_cfg: ServeConfig,
+                         backend=None) -> int:
+    """HBM a resident model costs: weight bytes plus its session's device
+    KV (slot cache, or the paged pool).
+
+    ``backend`` (registry name or instance) picks the weight accounting:
+    a q8-resident backend (``WeightBackend.q8_resident``, e.g. ``"q8"``)
+    holds serve-quantized leaves as ``{"q8","q8s"}`` — int8 levels plus
+    f32 per-channel scales — so eligible tensors are costed at 1 B/param
+    + scale width instead of the param-dtype ``jax.eval_shape`` size that
+    previously overcounted q8-resident models ~4x (and forfeited the
+    compressed-resident admission gains).  ``None`` keeps the
+    full-precision accounting (correct for bf16/container residency)."""
+    from ..compression.quantizers import serve_q8_policy
+    from ..compression.tree import _path_key
     from ..models.transformer import init_params
+    from .backends import resolve_backend
+
+    q8_res = (resolve_backend(backend).q8_resident
+              if backend is not None else False)
     shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
-    wb = sum(int(np.prod(s.shape)) * s.dtype.itemsize
-             for s in jax.tree.leaves(shapes))
+    wb = 0
+    for path, s in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = int(np.prod(s.shape))
+        if q8_res and serve_q8_policy(_path_key(path), s):
+            # {"q8","q8s"} leaf: int8 levels + f32 per-out-channel Delta
+            # (stacked ndim>=3 tensors carry one scale row per layer)
+            scales = (s.shape[0] * s.shape[-1] if s.ndim >= 3
+                      else s.shape[-1])
+            wb += n + 4 * scales
+        else:
+            wb += n * s.dtype.itemsize
     if serve_cfg.kv_page_size is not None:
         page = serve_cfg.kv_page_size
         n_max = -(-serve_cfg.max_len // page)
@@ -284,7 +308,8 @@ class ModelZoo:
         self._registry[model_id] = {
             "cfg": config,
             "rec": rec,
-            "bytes": model_resident_bytes(config, self.cfg.serve),
+            "bytes": model_resident_bytes(config, self.cfg.serve,
+                                          backend=self.cfg.backend),
         }
         return rec
 

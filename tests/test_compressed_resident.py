@@ -1,0 +1,245 @@
+"""Compressed-resident serving: every matmul from q8 tiles.
+
+Covers the fused q8 forward/decode path (gqa + mla attention, MoE expert
+dispatch, tied/untied heads, ragged decode batch sizes) against the
+dequantize-then-dense reference with tolerance pins, the grouped-expert
+kernel against its oracle, the tile-clamp regression (cached/explicit
+tiles larger than the padded operand must clamp + report, never crash),
+and the dispatch_report() contract: decode shapes *route* (no fallback
+records) on both the default and interpret impls, eligible tensors never
+hit the loop-body dequant, ineligible ones report it once.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, kernels
+from repro.kernels.dequant_matmul.ops import (default_tiles, dequant_matmul,
+                                              dequant_matmul_grouped,
+                                              tile_bounds)
+from repro.kernels.dequant_matmul.ref import (dequant_matmul_grouped_ref,
+                                              dequant_matmul_ref)
+from repro.models import transformer
+from repro.serve.quantized import (dequant_tree, is_q8,
+                                   quantize_params_for_serving)
+
+INTERP = kernels.KernelPolicy().override(
+    "dequant_matmul", "interpret").override(
+    "dequant_matmul_grouped", "interpret")
+
+
+def _quantized(name):
+    cfg = configs.get(name, smoke=True)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params_for_serving(params)
+    dp = dequant_tree(qp, jnp.dtype(cfg.compute_dtype))
+    return cfg, qp, dp
+
+
+# ---------------------------------------------------------------------------
+# grouped kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scale_shape", ["per_expert", "shared"])
+def test_grouped_kernel_matches_ref(scale_shape):
+    rng = np.random.default_rng(7)
+    e, m, k, n = 4, 8, 160, 96
+    x = jnp.asarray(rng.standard_normal((e, m, k)), jnp.float32)
+    wq = jnp.asarray(rng.integers(-127, 127, (e, k, n)), jnp.int8)
+    sc = jnp.asarray(rng.random((e, n) if scale_shape == "per_expert"
+                                else (n,)) * 0.01 + 1e-4, jnp.float32)
+    want = np.asarray(dequant_matmul_grouped_ref(x, wq, sc))
+    # interpret-mode pallas and the registry default (ref on cpu)
+    got_i = np.asarray(dequant_matmul_grouped(x, wq, sc, interpret=True))
+    got_d = np.asarray(kernels.get("dequant_matmul_grouped")(x, wq, sc))
+    np.testing.assert_allclose(got_i, want, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(got_d, want, atol=1e-4, rtol=1e-4)
+
+
+def test_grouped_registry_routes_without_fallback():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal((2, 8, 128)), jnp.float32)
+    wq = jnp.asarray(rng.integers(-127, 127, (2, 128, 128)), jnp.int8)
+    sc = jnp.asarray(rng.random((2, 128)) * 0.01, jnp.float32)
+    op = kernels.get("dequant_matmul_grouped")
+    for pol in (kernels.KernelPolicy(), INTERP):
+        plan = op.plan(x, wq, sc, policy=pol)
+        assert plan.fallback_reason is None
+    kernels.clear_dispatch_report()
+    op(x, wq, sc, policy=INTERP)
+    assert [r for r in kernels.dispatch_report()
+            if r.get("kind") == "fallback"] == []
+
+
+def test_batched_activation_flattening():
+    """(B, S, K) activations flatten to the kernel's M and reshape back."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((2, 3, 160)), jnp.float32)
+    wq = jnp.asarray(rng.integers(-127, 127, (160, 96)), jnp.int8)
+    sc = jnp.asarray(rng.random(96) * 0.01 + 1e-4, jnp.float32)
+    want = np.asarray(dequant_matmul_ref(x.reshape(6, 160), wq, sc)
+                      ).reshape(2, 3, 96)
+    got = np.asarray(dequant_matmul(x, wq, sc, interpret=True))
+    assert got.shape == (2, 3, 96)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# tile clamp (regression: `bm or tiles["bm"]` + pow2-bucket cache winners)
+# ---------------------------------------------------------------------------
+
+def test_tile_clamp_oversized_explicit_tiles():
+    """A cached winner for bucket m=64 applied verbatim to an m=3 decode
+    batch must clamp to the padded operand — and say so — not crash or
+    pad the batch 8x."""
+    rng = np.random.default_rng(10)
+    x = jnp.asarray(rng.standard_normal((3, 160)), jnp.float32)
+    wq = jnp.asarray(rng.integers(-127, 127, (160, 96)), jnp.int8)
+    sc = jnp.asarray(rng.random(96) * 0.01 + 1e-4, jnp.float32)
+    want = np.asarray(dequant_matmul_ref(x, wq, sc))
+    kernels.clear_dispatch_report()
+    got = np.asarray(dequant_matmul(x, wq, sc, bm=64, bk=1024,
+                                    interpret=True))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+    (rec,) = [r for r in kernels.dispatch_report()
+              if r.get("kind") == "tile_clamp"]
+    assert rec["op"] == "dequant_matmul"
+    assert "bm=64->8" in rec["reason"] and "bk=1024->256" in rec["reason"]
+
+
+def test_tile_clamp_through_policy_tiles():
+    """Policy tile pins (the same slot the tuning cache feeds) clamp at
+    dispatch too."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((3, 160)), jnp.float32)
+    wq = jnp.asarray(rng.integers(-127, 127, (160, 96)), jnp.int8)
+    sc = jnp.asarray(rng.random(96) * 0.01 + 1e-4, jnp.float32)
+    pol = INTERP.with_tiles("dequant_matmul", bm=256, bn=512, bk=1024)
+    kernels.clear_dispatch_report()
+    got = np.asarray(kernels.get("dequant_matmul")(x, wq, sc, policy=pol))
+    np.testing.assert_allclose(got, np.asarray(dequant_matmul_ref(x, wq, sc)),
+                               atol=1e-4, rtol=1e-4)
+    assert any(r.get("kind") == "tile_clamp"
+               for r in kernels.dispatch_report())
+
+
+def test_tile_bounds_cap_default_tiles():
+    b = tile_bounds(3, 160, 96)
+    assert b == {"bm": 8, "bn": 128, "bk": 256}
+    t = default_tiles(3, 160, 96)
+    assert all(t[p] <= b[p] for p in t)
+    g = dequant_matmul_grouped(
+        jnp.zeros((2, 3, 160), jnp.float32),
+        jnp.zeros((2, 160, 96), jnp.int8),
+        jnp.ones((96,), jnp.float32), bm=128, interpret=True)
+    assert g.shape == (2, 3, 96)
+
+
+# ---------------------------------------------------------------------------
+# fused-q8 vs dequantized-dense equivalence sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3-8b",          # gqa, untied head
+                                  "deepseek-v3-671b",   # mla + moe + shared
+                                  "deepseek-moe-16b"])  # gqa + moe + shared
+def test_forward_equivalence(arch):
+    cfg, qp, dp = _quantized(arch)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+    transformer._reported_loop_dequant.clear()
+    kernels.clear_dispatch_report()
+    lo_q, _, _ = transformer.forward(qp, cfg, tokens=toks)
+    lo_r, _, _ = transformer.forward(dp, cfg, tokens=toks)
+    np.testing.assert_allclose(np.asarray(lo_q), np.asarray(lo_r),
+                               atol=2e-5, rtol=2e-5)
+    assert bool(jnp.all(jnp.argmax(lo_q, -1) == jnp.argmax(lo_r, -1)))
+    # every projection routed: no constraint fallbacks, no loop dequant
+    recs = kernels.dispatch_report()
+    assert [r for r in recs if r.get("kind") == "fallback"
+            and r["op"].startswith("dequant_matmul")] == []
+    assert [r for r in recs if r.get("kind") == "loop_dequant"] == []
+
+
+@pytest.mark.parametrize("bsz", [1, 3, 5])
+def test_ragged_decode_identity(bsz):
+    """Greedy decode from q8-resident weights is token-identical to the
+    dequantized-dense path across ragged decode batch sizes."""
+    cfg, qp, dp = _quantized("llama3-8b")
+    toks = jax.random.randint(jax.random.PRNGKey(2), (bsz, 6), 0,
+                              cfg.vocab_size)
+    outs = []
+    for p in (qp, dp):
+        lo, caches = transformer.prefill(p, cfg, tokens=toks, max_len=12)
+        seq = [jnp.argmax(lo, -1)]
+        pos = jnp.full((bsz,), 6, jnp.int32)
+        for _ in range(3):
+            lo, caches = transformer.decode_step(p, cfg, caches, pos,
+                                                 tokens=seq[-1])
+            seq.append(jnp.argmax(lo, -1))
+            pos = pos + 1
+        outs.append(np.asarray(jnp.stack(seq)))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_decode_shapes_route_not_fallback():
+    """Decode-row shapes resolve cleanly on both the platform default and
+    the pallas-interpret impl — routing, not constraint fallback."""
+    rng = np.random.default_rng(12)
+    wq = jnp.asarray(rng.integers(-127, 127, (128, 256)), jnp.int8)
+    sc = jnp.asarray(rng.random(256) * 0.01 + 1e-4, jnp.float32)
+    op = kernels.get("dequant_matmul")
+    for m in (1, 3, 5, 8):
+        x = jnp.asarray(rng.standard_normal((m, 128)), jnp.float32)
+        for pol in (kernels.KernelPolicy(), INTERP):
+            plan = op.plan(x, wq, sc, policy=pol)
+            assert plan.fallback_reason is None
+            got = np.asarray(op(x, wq, sc, policy=pol))
+            np.testing.assert_allclose(
+                got, np.asarray(dequant_matmul_ref(x, wq, sc)),
+                atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# loop-body dequant: explicit, reported once, never for eligible tensors
+# ---------------------------------------------------------------------------
+
+def test_tied_head_fallback_reported_once():
+    cfg = configs.get("llama3-8b", smoke=True).replace(tie_embeddings=True)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params_for_serving(params)
+    dp = dequant_tree(qp, jnp.dtype(cfg.compute_dtype))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 6), 0,
+                              cfg.vocab_size)
+    transformer._reported_loop_dequant.clear()
+    kernels.clear_dispatch_report()
+    lo_q, _, _ = transformer.forward(qp, cfg, tokens=toks)
+    lo_r, _, _ = transformer.forward(dp, cfg, tokens=toks)
+    np.testing.assert_allclose(np.asarray(lo_q), np.asarray(lo_r),
+                               atol=2e-5, rtol=2e-5)
+    recs = [r for r in kernels.dispatch_report()
+            if r.get("kind") == "loop_dequant"]
+    assert len(recs) == 1 and "tied" in recs[0]["reason"]
+    # reported once per tensor, not once per compile/step
+    transformer.forward(qp, cfg, tokens=toks)
+    assert len([r for r in kernels.dispatch_report()
+                if r.get("kind") == "loop_dequant"]) == 1
+
+
+def test_ineligible_ssm_tensors_report_loop_dequant():
+    cfg, qp, dp = _quantized("mamba2-2.7b")
+    toks = jax.random.randint(jax.random.PRNGKey(4), (1, 6), 0,
+                              cfg.vocab_size)
+    transformer._reported_loop_dequant.clear()
+    kernels.clear_dispatch_report()
+    lo_q, _, _ = transformer.forward(qp, cfg, tokens=toks)
+    lo_r, _, _ = transformer.forward(dp, cfg, tokens=toks)
+    np.testing.assert_allclose(np.asarray(lo_q), np.asarray(lo_r),
+                               atol=2e-5, rtol=2e-5)
+    recs = [r for r in kernels.dispatch_report()
+            if r.get("kind") == "loop_dequant"]
+    names = {r["reason"].split(":", 1)[0] for r in recs}
+    assert names, "ssm mixer tensors must report their loop-body dequant"
+    # the eligible set never hits the loop-body path
+    assert not names & transformer._FUSED_ELIGIBLE

@@ -427,3 +427,50 @@ def test_zoo_acceptance_ten_configs(variant_root, tmp_path):
     assert rep["store"]["dedup_ratio"] >= 2.0, rep["store"]
     assert rep["store"]["models"] == 10
     zoo.close()
+
+
+def test_q8_resident_accounting_charges_compressed_bytes():
+    """model_resident_bytes with a q8-resident backend costs eligible
+    tensors at int8 levels + f32 scales, not the full param dtype (the
+    old accounting overcounted ~4x and forfeited the admission gains)."""
+    from repro.serve.kv import kv_cache_bytes
+
+    cfg = configs.get("llama3-8b", smoke=True)
+    serve_cfg = ServeConfig(slots=2, max_len=32)
+    full = model_resident_bytes(cfg, serve_cfg)
+    q8 = model_resident_bytes(cfg, serve_cfg, backend="q8")
+    assert q8 < full
+    # weight-only ratio (KV is identical on both sides) at the int8+scale
+    # width the serve bench gates on
+    kv = kv_cache_bytes(cfg, serve_cfg.slots, serve_cfg.max_len)
+    assert (q8 - kv) / (full - kv) <= 0.35
+    # bf16/container residency keeps the full-precision accounting
+    assert model_resident_bytes(cfg, serve_cfg, backend="container") == full
+
+
+@skip_on_forced_numpy
+def test_q8_backend_admits_more_models_same_budget(variant_root, tmp_path):
+    """Same hbm_budget, strictly more models resident with the q8
+    backend: the compressed-resident footprint is what admission sizes."""
+    cfg, _params, root = variant_root
+    serve_cfg = ServeConfig(slots=2, max_len=32)
+    full = model_resident_bytes(cfg, serve_cfg)
+    q8 = model_resident_bytes(cfg, serve_cfg, backend="q8")
+    # fits three q8-resident models but only one full-precision one
+    budget = full + q8 // 2
+    assert 3 * q8 <= budget < 2 * full
+    counts = {}
+    for backend in ("container", "q8"):
+        zoo = ModelZoo(str(tmp_path / f"store-{backend}"),
+                       ZooConfig(hbm_budget=budget, backend=backend,
+                                 serve=serve_cfg))
+        zoo.register("base", cfg, delta.step_dir(root, 1))
+        zoo.register("var-a", cfg, delta.step_dir(root, 2))
+        zoo.register("var-b", cfg, delta.step_dir(root, 3))
+        for m in ("base", "var-a", "var-b"):
+            zoo.admit(m)
+        counts[backend] = len(zoo.resident())
+        assert zoo.resident_bytes() <= budget
+        zoo.close()
+    assert counts["container"] == 1
+    assert counts["q8"] == 3
