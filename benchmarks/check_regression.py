@@ -30,6 +30,10 @@ headline throughput/latency numbers of each bench:
   warm admit strictly faster than cold) and routed ``total_tok_s``
   (higher better; hard invariant: routed outputs stay token-identical
   to dedicated single-model sessions, and the budget forced eviction)
+* ``BENCH_rd.json``            — per-arch RD-policy ``bytes_ratio`` vs the
+  fixed-lambda ``deepcabac-v3`` default (lower better; hard invariant:
+  every ``dominance`` row must report ``dominates`` — the swept
+  ``deepcabac-rd`` container is <= bytes at <= greedy-token error)
 
 Escape hatch: a commit whose message contains ``[bench-skip]`` passes the
 gate with a notice (pass the message via ``--commit-message`` — CI hands
@@ -52,7 +56,7 @@ import sys
 
 BENCH_FILES = ("BENCH_serve.json", "BENCH_cold_start.json",
                "BENCH_shard_restore.json", "BENCH_delta.json",
-               "BENCH_kv_paging.json", "BENCH_zoo.json")
+               "BENCH_kv_paging.json", "BENCH_zoo.json", "BENCH_rd.json")
 
 
 def _load(path: str) -> dict | None:
@@ -110,6 +114,11 @@ def smoke_metrics(fname: str, report: dict) -> dict[str, tuple[float, bool]]:
             elif r["path"] == "route":
                 out["zoo/route/total_tok_s"] = (float(r["total_tok_s"]),
                                                 True)
+    elif fname == "BENCH_rd.json":
+        for r in rows:
+            if r["path"] == "dominance":
+                out[f"rd/{r['arch']}/bytes_ratio"] = (
+                    float(r["bytes_ratio"]), False)
     return out
 
 
@@ -200,6 +209,23 @@ def check_invariants(fname: str, report: dict) -> list[str]:
                     errors.append(
                         "zoo: the route bench's budget never forced an "
                         "eviction — the admission loop went unexercised")
+    elif fname == "BENCH_rd.json":
+        saw_dominance = False
+        for r in report.get("rows", []):
+            if r["path"] != "dominance":
+                continue
+            saw_dominance = True
+            if not r.get("dominates"):
+                errors.append(
+                    f"rd/{r['arch']}: swept deepcabac-rd point "
+                    f"({r['rd_bytes']} B @ token_err {r['rd_token_err']}) "
+                    f"does not dominate the fixed-lambda deepcabac-v3 "
+                    f"default ({r['v3_bytes']} B @ {r['v3_token_err']}) — "
+                    f"the RD search must find <= bytes at <= distortion")
+        if not saw_dominance:
+            errors.append(
+                "rd: no dominance rows in BENCH_rd.json — the sweep "
+                "never compared against the deepcabac-v3 baseline")
     return errors
 
 

@@ -78,6 +78,10 @@ class CheckpointConfig:
                                    # I-frame every K saves, P-frames between
                                    # (needs a delta-capable codec, e.g.
                                    # "deepcabac-delta")
+    policy_table: object | None = None  # TensorPolicy / dict / JSON path for
+                                   # per-tensor mixed precision (pairs with
+                                   # codec="deepcabac-rd"; see
+                                   # compression.rd_search)
 
 
 class CheckpointManager:
@@ -109,14 +113,20 @@ class CheckpointManager:
     # -- save ----------------------------------------------------------------
     def _codec(self):
         """Resolve the params codec from cfg (registry name or legacy
-        params_mode alias).  delta_rel/min_quant_ndim are forwarded to any
-        codec whose factory accepts them and ignored by the rest."""
-        from ..compression import make
+        params_mode alias).  This is a generic-config-at-any-codec
+        forwarder, so it uses ``get(..., strict=False)``: delta_rel /
+        min_quant_ndim / policy_table reach any codec whose factory
+        accepts them; the rest drop them with the drop recorded in the
+        codec's hyperparams (and hence in the checkpoint metadata)."""
+        from ..compression import get
         name = self.cfg.codec
         if name is None:
             name = "ckpt-nearest" if self.cfg.params_mode == "cabac" else "raw"
-        return make(name, delta_rel=self.cfg.delta_rel,
-                    min_ndim=self.cfg.min_quant_ndim)
+        overrides = {"delta_rel": self.cfg.delta_rel,
+                     "min_ndim": self.cfg.min_quant_ndim}
+        if self.cfg.policy_table is not None:
+            overrides["policy_table"] = self.cfg.policy_table
+        return get(name, strict=False, **overrides)
 
     def _write(self, payloads: dict[str, bytes], meta: dict, step: int):
         final = os.path.join(self.cfg.directory, f"step_{step:08d}")

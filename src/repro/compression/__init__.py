@@ -10,9 +10,10 @@ same three strategies behind one :class:`Codec`:
     tree = compression.decompress(artifact.blob, like=params)
 
 Registered codecs: ``deepcabac-v2``, ``deepcabac-v3`` (lane-scheduled
-CABAC, container v3), ``deepcabac-delta`` (temporal "P-frame" residual
-coding, container v4), ``ckpt-nearest``, ``serve-q8``, ``huffman``,
-``raw`` (see docs/compression_api.md).
+CABAC, container v3), ``deepcabac-rd`` (per-tensor mixed precision from
+a swept ``TensorPolicy`` table — see ``rd_search``), ``deepcabac-delta``
+(temporal "P-frame" residual coding, container v4), ``ckpt-nearest``,
+``serve-q8``, ``huffman``, ``raw`` (see docs/compression_api.md).
 
 Import discipline: only the leaf modules (``artifact``, ``q8``, ``tree``)
 load eagerly — they import nothing from ``repro.core``.  The strategy /
@@ -43,6 +44,7 @@ _LAZY = {
     "RDGridQuantizer": "quantizers",
     "NearestStdQuantizer": "quantizers",
     "PerChannelInt8Quantizer": "quantizers",
+    "PolicyFn": "quantizers",
     "quantize_leaf": "quantizers",
     "quantize_tree_q8": "quantizers",
     "ndim_float_policy": "quantizers",
@@ -53,6 +55,16 @@ _LAZY = {
     "make": "registry",
     "register": "registry",
     "available": "registry",
+    "TensorRule": "rd_search",
+    "TensorPolicy": "rd_search",
+    "PolicyQuantizer": "rd_search",
+    "resolve_policy": "rd_search",
+    "RDSearchConfig": "rd_search",
+    "RDPoint": "rd_search",
+    "rd_sweep": "rd_search",
+    "pareto_front": "rd_search",
+    "fisher_for": "rd_search",
+    "TaskProxy": "rd_search",
 }
 
 __all__ = sorted({"Artifact", "Q8_BLOCK", "q8_blockable", "q8_decode",

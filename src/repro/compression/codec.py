@@ -11,7 +11,6 @@ structure (with dtype restore, incl. bfloat16) from a template.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable
 
 import numpy as np
 
@@ -22,7 +21,7 @@ from ..core.container import ContainerWriter
 from ..core.quant import nearest_level
 from .artifact import Artifact
 from .coders import EntropyCoder
-from .quantizers import Quantizer
+from .quantizers import PolicyFn, Quantizer
 from .tree import flatten_tree, unflatten_like
 
 
@@ -65,7 +64,7 @@ class Codec:
     name: str
     coder: EntropyCoder | None = None       # None => raw-only codec
     quantizer: Quantizer | None = None      # None => everything raw
-    policy: Callable[[str, np.ndarray], bool] | None = None
+    policy: PolicyFn | None = None
     hyperparams: dict = field(default_factory=dict)
 
     def quantize_entries(self, tree) -> dict:

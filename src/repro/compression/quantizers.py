@@ -10,7 +10,7 @@ paper's protocol).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
+from typing import Callable, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -28,12 +28,28 @@ from ..core.quant import nearest_level
 STACKED_TOP_KEYS = ("layers", "dense_layers")
 
 
+@runtime_checkable
+class PolicyFn(Protocol):
+    """The one per-tensor policy signature every codec shares.
+
+    Called with the flat leaf name (``layers/attn/wq``-style, as produced
+    by ``compression.tree.flatten_tree``) and the leaf array; returns
+    True when the leaf should be quantized, False to store it raw.
+    ``serve_q8_policy``, the :func:`ndim_float_policy` family, and the
+    ``deepcabac-rd`` table-membership policy all implement it — custom
+    policies passed to :class:`~repro.compression.codec.Codec` should
+    too (any plain ``(name, w) -> bool`` callable qualifies).
+    """
+
+    def __call__(self, name: str, w: np.ndarray) -> bool: ...
+
+
 def is_float_dtype(dt) -> bool:
     """True for any float dtype incl. ml_dtypes extensions (bfloat16...)."""
     return bool(jnp.issubdtype(np.dtype(dt), jnp.floating))
 
 
-def ndim_float_policy(min_ndim: int = 2) -> Callable[[str, np.ndarray], bool]:
+def ndim_float_policy(min_ndim: int = 2) -> PolicyFn:
     """Quantize float tensors of rank >= min_ndim; everything else raw."""
     def policy(name: str, w: np.ndarray) -> bool:
         return w.ndim >= min_ndim and is_float_dtype(w.dtype)

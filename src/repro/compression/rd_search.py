@@ -1,0 +1,538 @@
+"""Rate-distortion Pareto search across the config zoo (ROADMAP item 5).
+
+The paper's headline claim is RD-*optimal* quantization — eq. 11,
+minimize rate + lambda * FIM-weighted distortion — but a single
+hand-picked (step, lambda) exercises none of the "optimal".  This module
+sweeps the RD grid per model config, measures what actually matters for
+deployment (compressed container bytes vs a task-proxy distortion
+through the real serving path), and distils the result into a deployable
+artifact: a :class:`TensorPolicy` table mapping each flat tensor name to
+its own (step, lambda, quantizer-kind) operating point, consumed by the
+registered ``deepcabac-rd`` codec and accepted by ``CheckpointManager``,
+the serve ``WeightBackend``s, and ``ModelZoo`` admission.
+
+Pipeline (:func:`rd_sweep`):
+
+1. **Global grid** — for each (delta_rel, lambda) point, RD-assign every
+   covered tensor (``rd_quant`` kernel dispatch on TPU, the numpy oracle
+   elsewhere — see :func:`rd_assign_levels`), entropy-code the full tree
+   into a real lane-scheduled v3 container, decode it back, and measure
+   greedy-token disagreement + last-position logit KL against the
+   uncompressed model through ``ServeSession`` (:class:`TaskProxy`).
+2. **Pareto front** — :func:`pareto_front` marks the non-dominated
+   (bytes, distortion) points; the winner is the cheapest point within
+   the token-error budget.
+3. **Per-tensor refinement** — the constrained form of eq. 11: starting
+   from the winner's uniform operating point, greedily coarsen the steps
+   of the tensors with the best rate-saving per unit FIM-weighted
+   distortion (R_hat from ``rate_model.estimate_level_bits``, D_t =
+   sum_i F_i (w_i - Delta k_i)^2 with F the empirical Fisher diagonal of
+   ``core/fim.py``) until a distortion budget relative to the winner is
+   spent.  The FIM decides *which tensors tolerate coarser grids*, while
+   level assignment itself stays F=1 so the deployed ``deepcabac-rd``
+   encode is bit-identical to what the sweep measured.  (Scoring the
+   unconstrained J = R + lam*D at the winner's lambda instead degenerates:
+   the small lambdas that win the global grid make the rate term dominate
+   any step change, so every tensor coarsens at once.)  The refined table
+   is re-validated end to end and reverted wholesale if it leaves the
+   token-error budget.
+
+Determinism: everything here is seeded and assignment is the registered
+``rd_quant`` oracle, so a saved policy table re-applied through
+``get("deepcabac-rd", policy_table=...)`` reproduces the swept container
+byte for byte.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core import binarization as B
+from ..core.codec import QuantizedTensor
+from ..core.quant import nearest_level, rd_assign
+from ..core.rate_model import (build_rate_table, estimate_bin_probs,
+                               estimate_level_bits)
+from .quantizers import (PerChannelInt8Quantizer, Quantizer,
+                         ndim_float_policy, relative_step)
+from .tree import flatten_tree
+
+RULE_KINDS = ("rd-grid", "q8", "raw")
+POLICY_FORMAT = "repro-tensor-policy"
+POLICY_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# TensorPolicy: the deployable artifact
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TensorRule:
+    """One tensor's operating point: grid step, RD lambda, quantizer kind
+    (``rd-grid`` | ``q8`` | ``raw``)."""
+
+    step: float
+    lam: float = 0.0
+    kind: str = "rd-grid"
+
+    def __post_init__(self):
+        if self.kind not in RULE_KINDS:
+            raise ValueError(f"unknown rule kind {self.kind!r}; "
+                             f"expected one of {RULE_KINDS}")
+
+
+@dataclass
+class TensorPolicy:
+    """Flat-name -> :class:`TensorRule` table + provenance metadata.
+
+    The serialized form (``save``/``load``, plain JSON) is what benches
+    commit and configs reference by path; ``meta`` records where the
+    table came from (arch, winning grid point, seed) so a policy file is
+    auditable on its own.
+    """
+
+    rules: dict[str, TensorRule] = field(default_factory=dict)
+    meta: dict = field(default_factory=dict)
+
+    def rule_for(self, name: str) -> TensorRule | None:
+        return self.rules.get(name)
+
+    def to_dict(self) -> dict:
+        return {
+            "format": POLICY_FORMAT,
+            "version": POLICY_VERSION,
+            "meta": dict(self.meta),
+            "rules": {name: {"step": r.step, "lam": r.lam, "kind": r.kind}
+                      for name, r in sorted(self.rules.items())},
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TensorPolicy":
+        if d.get("format") != POLICY_FORMAT:
+            raise ValueError(
+                f"not a tensor-policy payload (format="
+                f"{d.get('format')!r}, want {POLICY_FORMAT!r})")
+        if int(d.get("version", -1)) > POLICY_VERSION:
+            raise ValueError(
+                f"tensor-policy version {d['version']} is newer than "
+                f"this reader ({POLICY_VERSION})")
+        rules = {name: TensorRule(step=float(r["step"]),
+                                  lam=float(r.get("lam", 0.0)),
+                                  kind=str(r.get("kind", "rd-grid")))
+                 for name, r in d.get("rules", {}).items()}
+        return cls(rules=rules, meta=dict(d.get("meta", {})))
+
+    def save(self, path: str | os.PathLike) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str | os.PathLike) -> "TensorPolicy":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+
+def resolve_policy(obj) -> TensorPolicy:
+    """Coerce the ``policy_table=`` forms the registry accepts — a
+    :class:`TensorPolicy`, its ``to_dict`` payload, or a JSON path."""
+    if isinstance(obj, TensorPolicy):
+        return obj
+    if isinstance(obj, dict):
+        return TensorPolicy.from_dict(obj)
+    if isinstance(obj, (str, os.PathLike)):
+        return TensorPolicy.load(obj)
+    raise TypeError(
+        f"policy_table must be a TensorPolicy, dict payload, or JSON "
+        f"path; got {type(obj).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Level assignment: one entry point over the kernel and the host oracle
+# ---------------------------------------------------------------------------
+
+def _use_kernel(assign: str) -> bool:
+    if assign == "host":
+        return False
+    if assign == "kernel":
+        return True
+    if assign != "auto":
+        raise ValueError(f"assign must be auto|kernel|host, got {assign!r}")
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def rd_assign_levels(w: np.ndarray, step: float, lam: float,
+                     fim: np.ndarray | None = None, *,
+                     num_gr: int = B.DEFAULT_NUM_GR, assign: str = "auto",
+                     window: int = 4, passes: int = 2,
+                     refinements: int = 1) -> np.ndarray:
+    """Eq.-11 level assignment with the standard NN-seed -> statistics ->
+    assignment loop, routed through the registered ``rd_quant`` kernel on
+    TPU and the numpy oracle (``core.quant.rd_assign``) elsewhere.
+
+    ``assign="auto"`` picks per backend.  The kernel's jit wrapper treats
+    (step, lam) as static arguments, so a per-tensor-step sweep on CPU
+    would recompile once per tensor per grid point — the host oracle is
+    the right default there and is the reference the kernel is
+    differentially tested against, so both routes yield the same levels.
+    Returns int64 levels with ``w``'s shape.
+    """
+    arr = np.asarray(w)
+    flat = arr.astype(np.float64).ravel()
+    nn = nearest_level(flat, step)
+    if lam == 0.0:
+        return nn.reshape(arr.shape)  # RD reduces to nearest-neighbour
+    max_level = int(np.abs(nn).max()) + window + 1
+    fl = None if fim is None else np.asarray(fim, dtype=np.float64).ravel()
+    use_kernel = _use_kernel(assign)
+    levels = nn
+    for _ in range(1 + max(refinements, 0)):
+        probs = estimate_bin_probs(levels, num_gr)
+        if use_kernel:
+            from .. import kernels
+            levels = np.asarray(kernels.get("rd_quant")(
+                flat, fl, probs, step=step, lam=lam, window=window,
+                max_level=max_level, passes=passes)).astype(np.int64)
+        else:
+            table = build_rate_table(probs, max_level)
+            levels = rd_assign(flat, fl, step, lam, table, window=window,
+                               max_level=max_level, passes=passes)
+    return levels.reshape(arr.shape)
+
+
+@dataclass
+class PolicyQuantizer(Quantizer):
+    """Per-tensor mixed precision: each leaf is quantized on its
+    :class:`TensorRule` from the table — ``rd-grid`` through
+    :func:`rd_assign_levels` at the rule's own (step, lambda), ``q8``
+    through the per-channel int8 serving quantizer.  The ``deepcabac-rd``
+    codec's policy fn keeps uncovered/``raw`` leaves away from here."""
+
+    table: TensorPolicy = field(default_factory=TensorPolicy)
+    num_gr: int = B.DEFAULT_NUM_GR
+    assign: str = "auto"
+    window: int = 4
+    passes: int = 2
+    refinements: int = 1
+
+    def quantize(self, name: str, w: np.ndarray):
+        rule = self.table.rule_for(name)
+        if rule is None or rule.kind == "raw":
+            raise ValueError(
+                f"PolicyQuantizer reached {name!r} without an applicable "
+                f"rule — the codec policy fn must exclude it")
+        arr = np.asarray(w)
+        if rule.kind == "q8":
+            return PerChannelInt8Quantizer().quantize(name, arr)
+        levels = rd_assign_levels(
+            arr, rule.step, rule.lam, num_gr=self.num_gr,
+            assign=self.assign, window=self.window, passes=self.passes,
+            refinements=self.refinements)
+        return QuantizedTensor(levels=levels, step=rule.step,
+                               dtype=str(arr.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Task-proxy distortion through the serving path
+# ---------------------------------------------------------------------------
+
+class TaskProxy:
+    """Distortion oracle: greedy-token disagreement + last-position logit
+    KL of a candidate weight tree against the uncompressed reference,
+    measured through the real request path (``ServeSession``, greedy
+    decode) — not a weight-space MSE.  Token-input archs only (the VLM
+    configs take embeds; their text towers are covered by the same
+    families elsewhere in the zoo)."""
+
+    def __init__(self, cfg, ref_params, *, prompts: int = 4,
+                 prompt_len: int = 8, decode_steps: int = 8, seed: int = 0):
+        import jax
+
+        self.cfg = cfg
+        self.decode_steps = decode_steps
+        rng = np.random.default_rng(seed)
+        self.prompts = [
+            rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+            for _ in range(prompts)]
+        self.ref_tokens = self._greedy_tokens(ref_params)
+        self.ref_logp = np.asarray(
+            jax.nn.log_softmax(self._last_logits(ref_params), axis=-1),
+            dtype=np.float64)
+
+    def _greedy_tokens(self, params) -> list[list[int]]:
+        from ..serve.session import ServeConfig, ServeSession
+        scfg = ServeConfig(slots=len(self.prompts),
+                           max_len=len(self.prompts[0]) + self.decode_steps)
+        session = ServeSession(self.cfg, params, backend="bf16",
+                               serve_cfg=scfg)
+        handles = [session.submit(p, max_new_tokens=self.decode_steps)
+                   for p in self.prompts]
+        session.run()
+        return [[int(t) for t in h.tokens] for h in handles]
+
+    def _last_logits(self, params) -> np.ndarray:
+        from ..models.transformer import prefill
+        logits, _ = prefill(params, self.cfg,
+                            tokens=np.stack(self.prompts))
+        return np.asarray(logits, dtype=np.float64)
+
+    def measure(self, cand_params) -> dict:
+        """-> {"token_err", "logit_kl"} of the candidate tree."""
+        import jax
+
+        cand_tokens = self._greedy_tokens(cand_params)
+        total = sum(len(t) for t in self.ref_tokens)
+        wrong = sum(a != b for ref, got in zip(self.ref_tokens, cand_tokens)
+                    for a, b in zip(ref, got))
+        cand_logp = np.asarray(
+            jax.nn.log_softmax(self._last_logits(cand_params), axis=-1),
+            dtype=np.float64)
+        kl = float(np.mean(np.sum(
+            np.exp(self.ref_logp) * (self.ref_logp - cand_logp), axis=-1)))
+        return {"token_err": wrong / max(total, 1),
+                "logit_kl": max(kl, 0.0)}
+
+
+# ---------------------------------------------------------------------------
+# The sweep
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RDSearchConfig:
+    """Sweep knobs.  The defaults are smoke-scale (CI); the nightly bench
+    widens the grids."""
+
+    delta_rels: tuple = (2e-3, 6e-3, 2e-2)   # relative grid steps
+    lambdas: tuple = (0.0, 3e-4, 1e-3)       # RD trade-off points
+    num_gr: int = B.DEFAULT_NUM_GR
+    min_ndim: int = 2                         # tensors below stay raw
+    prompts: int = 4
+    prompt_len: int = 8
+    decode_steps: int = 8
+    seed: int = 0
+    token_err_budget: float = 0.0             # winner must stay within
+    refine: bool = True                       # stage-B per-tensor search
+    refine_factors: tuple = (2.0, 4.0)        # coarser steps to try
+    refine_dist_growth: float = 1.0           # stage-B FIM-weighted
+    # distortion budget, as a fraction of the winner's own distortion
+    fim_batches: int = 2                      # 0 => F_i = 1 refinement
+    fim_batch: int = 2
+    fim_seq: int = 16
+    assign: str = "auto"                      # rd_assign_levels routing
+
+
+@dataclass
+class RDPoint:
+    """One measured grid point of the bytes-vs-distortion plane."""
+
+    delta_rel: float
+    lam: float
+    bytes: int
+    token_err: float
+    logit_kl: float
+    on_front: bool = False
+
+    def to_dict(self) -> dict:
+        return {"delta_rel": self.delta_rel, "lam": self.lam,
+                "bytes": self.bytes, "token_err": round(self.token_err, 6),
+                "logit_kl": round(self.logit_kl, 8),
+                "on_front": self.on_front}
+
+
+@dataclass
+class RDSweepResult:
+    points: list[RDPoint]
+    policy: TensorPolicy
+    winner: RDPoint
+    policy_bytes: int
+    policy_token_err: float
+    policy_logit_kl: float
+    refined_tensors: int        # rules coarsened past the winner's step
+    reverted: bool              # stage-B left the budget and was undone
+
+
+def _distortion_key(p: RDPoint) -> tuple:
+    return (p.token_err, p.logit_kl)
+
+
+def pareto_front(points: list[RDPoint]) -> list[RDPoint]:
+    """Mark and return the non-dominated points of the (bytes,
+    (token_err, logit_kl)) plane, cheapest first.  q dominates p when it
+    is <= on both axes and strictly better on one."""
+    for p in points:
+        p.on_front = not any(
+            q is not p and q.bytes <= p.bytes
+            and _distortion_key(q) <= _distortion_key(p)
+            and (q.bytes < p.bytes or _distortion_key(q) < _distortion_key(p))
+            for q in points)
+    return sorted((p for p in points if p.on_front),
+                  key=lambda p: (p.bytes, _distortion_key(p)))
+
+
+def fisher_for(cfg, params, *, batches: int = 2, batch: int = 2,
+               seq: int = 16, seed: int = 0):
+    """Empirical Fisher diagonal of ``params`` on the synthetic training
+    stream (``data.pipeline.make_batch``) — the F_i of eq. 11."""
+    from ..core.fim import empirical_fisher_diag
+    from ..data.pipeline import make_batch
+    from ..models.transformer import train_loss
+
+    bs = [make_batch(cfg, i, batch=batch, seq=seq, seed=seed)
+          for i in range(max(batches, 1))]
+    return empirical_fisher_diag(lambda p, b: train_loss(p, b, cfg),
+                                 params, bs, max_batches=len(bs))
+
+
+def _sweep_codec(num_gr: int):
+    from .coders import CabacV3Coder
+    from .codec import Codec
+    return Codec("rd-sweep", coder=CabacV3Coder(num_gr=num_gr))
+
+
+def _measure_entries(codec, entries: dict, like, proxy: TaskProxy):
+    """Encode a full entry dict into a real container, decode it back,
+    and score it — bytes and distortion both come from the artifact a
+    deployment would actually ship."""
+    from .codec import decompress
+    art = codec.compress_entries(entries)
+    cand = decompress(art.blob, like=like)
+    d = proxy.measure(cand)
+    return len(art.blob), d
+
+
+def rd_sweep(cfg, params, search: RDSearchConfig | None = None,
+             fim=None) -> RDSweepResult:
+    """Sweep the RD grid for one model config; see the module docstring
+    for the three stages.  ``fim`` (a pytree matching ``params``)
+    overrides the empirical-Fisher computation; pass it when the caller
+    already has curvature estimates (e.g. from training)."""
+    search = search or RDSearchConfig()
+    proxy = TaskProxy(cfg, params, prompts=search.prompts,
+                      prompt_len=search.prompt_len,
+                      decode_steps=search.decode_steps, seed=search.seed)
+    flat = {name: np.asarray(w) for name, w in flatten_tree(params).items()}
+    covered_by = ndim_float_policy(search.min_ndim)
+    covered = {name: w for name, w in flat.items()
+               if w.size > 0 and covered_by(name, w)}
+    if not covered:
+        raise ValueError(f"config {cfg.name!r}: no tensors pass the "
+                         f"min_ndim={search.min_ndim} policy")
+    codec = _sweep_codec(search.num_gr)
+
+    def entries_for(rules: dict[str, TensorRule]) -> dict:
+        out = dict(flat)
+        for name, rule in rules.items():
+            levels = rd_assign_levels(
+                covered[name], rule.step, rule.lam, num_gr=search.num_gr,
+                assign=search.assign)
+            out[name] = QuantizedTensor(levels=levels, step=rule.step,
+                                        dtype=str(covered[name].dtype))
+        return out
+
+    # -- stage A: global (delta_rel, lambda) grid ------------------------
+    points: list[RDPoint] = []
+    rules_at: dict[tuple, dict[str, TensorRule]] = {}
+    for dr in search.delta_rels:
+        steps = {name: relative_step(w, dr) for name, w in covered.items()}
+        for lam in search.lambdas:
+            rules = {name: TensorRule(step=steps[name], lam=lam)
+                     for name in covered}
+            size, d = _measure_entries(codec, entries_for(rules), params,
+                                       proxy)
+            rules_at[(dr, lam)] = rules
+            points.append(RDPoint(delta_rel=dr, lam=lam, bytes=size,
+                                  token_err=d["token_err"],
+                                  logit_kl=d["logit_kl"]))
+
+    front = pareto_front(points)
+    in_budget = [p for p in front if p.token_err <= search.token_err_budget]
+    winner = (min(in_budget, key=lambda p: (p.bytes, p.logit_kl))
+              if in_budget
+              else min(front, key=lambda p: (_distortion_key(p), p.bytes)))
+
+    # -- stage B: distortion-budgeted per-tensor refinement ---------------
+    rules = dict(rules_at[(winner.delta_rel, winner.lam)])
+    refined, reverted = 0, False
+    if search.refine and search.refine_factors:
+        fim_flat = (flatten_tree(fim) if fim is not None
+                    else flatten_tree(fisher_for(
+                        cfg, params, batches=search.fim_batches,
+                        batch=search.fim_batch, seq=search.fim_seq,
+                        seed=search.seed))
+                    if search.fim_batches > 0 else {})
+
+        def wdist(name: str, step: float, levels: np.ndarray) -> float:
+            w = covered[name].astype(np.float64)
+            f = fim_flat.get(name)
+            fw = (np.ones_like(w) if f is None
+                  else np.asarray(f, dtype=np.float64))
+            return float((fw * (w - step * levels) ** 2).sum())
+
+        # candidate coarsenings: (bits saved) / (FIM-weighted distortion
+        # added), at most one step change per tensor
+        total_base_dist = 0.0
+        cands: list[tuple[float, float, str, TensorRule]] = []
+        for name in covered:
+            base = rules[name]
+            base_levels = rd_assign_levels(
+                covered[name], base.step, base.lam, num_gr=search.num_gr,
+                assign=search.assign)
+            base_bits = estimate_level_bits(base_levels, search.num_gr)
+            total_base_dist += wdist(name, base.step, base_levels)
+            for fac in search.refine_factors:
+                step2 = base.step * fac
+                levels2 = rd_assign_levels(
+                    covered[name], step2, base.lam, num_gr=search.num_gr,
+                    assign=search.assign)
+                saved = base_bits - estimate_level_bits(levels2,
+                                                        search.num_gr)
+                grown = (wdist(name, step2, levels2)
+                         - wdist(name, base.step, base_levels))
+                if saved > 0:
+                    eff = saved / max(grown, 1e-30)
+                    cands.append((eff, grown, name,
+                                  TensorRule(step=step2, lam=base.lam)))
+
+        budget = search.refine_dist_growth * total_base_dist
+        taken: set[str] = set()
+        for eff, grown, name, rule in sorted(cands, key=lambda c: -c[0]):
+            if name in taken or grown > budget:
+                continue
+            budget -= grown
+            rules[name] = rule
+            taken.add(name)
+        refined = len(taken)
+
+        if refined:
+            size, d = _measure_entries(codec, entries_for(rules), params,
+                                       proxy)
+            err_budget = max(search.token_err_budget, winner.token_err)
+            if d["token_err"] > err_budget:
+                rules = dict(rules_at[(winner.delta_rel, winner.lam)])
+                refined, reverted = 0, True
+
+    policy = TensorPolicy(
+        rules=rules,
+        meta={"arch": cfg.name, "delta_rel": winner.delta_rel,
+              "lam": winner.lam, "num_gr": search.num_gr,
+              "min_ndim": search.min_ndim, "seed": search.seed,
+              "refined_tensors": refined,
+              "grid": {"delta_rels": list(search.delta_rels),
+                       "lambdas": list(search.lambdas)}})
+
+    # -- final validation through the registered codec itself ------------
+    from .registry import get as _get
+    rd_codec = _get("deepcabac-rd", policy_table=policy,
+                    num_gr=search.num_gr, min_ndim=search.min_ndim,
+                    assign=search.assign)
+    from .codec import decompress
+    art = rd_codec.compress(params)
+    d = proxy.measure(decompress(art.blob, like=params))
+    return RDSweepResult(points=points, policy=policy, winner=winner,
+                         policy_bytes=len(art.blob),
+                         policy_token_err=d["token_err"],
+                         policy_logit_kl=d["logit_kl"],
+                         refined_tensors=refined, reverted=reverted)

@@ -3,11 +3,23 @@
 Factories take keyword overrides so call sites tune the hyperparameters
 without re-plumbing quantizer/coder objects.  New coders/backends plug in
 here via :func:`register` without touching any call site.
+
+``get`` is the single entry point.  By default it is *strict*: an
+override the factory does not accept raises ``TypeError`` naming the
+accepted parameters (so ``lamda=0.1`` can never be silently ignored).
+Callers forwarding one generic config at a user-chosen codec — e.g.
+``CheckpointConfig.delta_rel`` is meaningful for ``ckpt-nearest`` and
+``huffman`` but not for ``serve-q8``/``raw`` — pass ``strict=False``:
+unknown overrides are dropped, and the drop is recorded in the codec's
+``hyperparams["dropped_overrides"]`` so it shows up in checkpoint
+metadata instead of vanishing.  The old ``make`` (which dropped
+silently) survives as a deprecated shim for one release.
 """
 
 from __future__ import annotations
 
 import inspect
+import warnings
 from typing import Callable
 
 from ..core import binarization as B
@@ -16,8 +28,8 @@ from .coders import (CabacCoder, CabacDeltaCoder, CabacV3Coder, HuffmanCoder,
                      RawLevelCoder)
 from .codec import Codec, DeltaCodec
 from .quantizers import (NearestStdQuantizer, PerChannelInt8Quantizer,
-                         RDGridQuantizer, ndim_float_policy, relative_step,
-                         serve_q8_policy)
+                         PolicyFn, RDGridQuantizer, ndim_float_policy,
+                         relative_step, serve_q8_policy)
 
 _REGISTRY: dict[str, Callable[..., Codec]] = {}
 
@@ -30,46 +42,83 @@ def available() -> list[str]:
     return sorted(_REGISTRY)
 
 
-def get(name: str, **overrides) -> Codec:
-    """Build a registered codec, applying keyword overrides to its factory."""
-    if name not in _REGISTRY:
-        raise KeyError(f"unknown codec {name!r}; available: {available()}")
-    return _REGISTRY[name](**overrides)
+def get(name: str, *, strict: bool = True, **overrides) -> Codec:
+    """Build a registered codec, applying keyword overrides to its factory.
 
-
-def make(name: str, **overrides) -> Codec:
-    """Like :func:`get`, but drops overrides the factory doesn't accept —
-    for callers forwarding one generic config at a user-chosen codec
-    (e.g. CheckpointConfig.delta_rel is meaningful for ckpt-nearest and
-    huffman but not for serve-q8/raw)."""
+    ``strict=True`` (default): an override the factory does not accept
+    raises ``TypeError``.  ``strict=False``: unknown overrides are
+    dropped and recorded in the built codec's
+    ``hyperparams["dropped_overrides"]`` — the forwarding mode for
+    callers pushing one generic config at a user-chosen codec.
+    """
     if name not in _REGISTRY:
         raise KeyError(f"unknown codec {name!r}; available: {available()}")
     factory = _REGISTRY[name]
     params = inspect.signature(factory).parameters
-    return factory(**{k: v for k, v in overrides.items() if k in params})
+    takes_var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                       for p in params.values())
+    dropped: list[str] = []
+    if not takes_var_kw:
+        unknown = sorted(set(overrides) - set(params))
+        if unknown:
+            if strict:
+                raise TypeError(
+                    f"codec {name!r} does not accept override(s) "
+                    f"{unknown}; accepted: {sorted(params)} "
+                    f"(pass strict=False to forward a generic config and "
+                    f"record the drop)")
+            dropped = unknown
+            overrides = {k: v for k, v in overrides.items()
+                         if k not in unknown}
+    codec = factory(**overrides)
+    if dropped and hasattr(codec, "hyperparams"):
+        codec.hyperparams = {**codec.hyperparams,
+                             "dropped_overrides": dropped}
+    return codec
+
+
+def make(name: str, **overrides) -> Codec:
+    """Deprecated: use ``get(name, strict=False, **overrides)``.
+
+    The historical forwarding entry point — it dropped unknown overrides
+    *silently*, so a typo'd hyperparameter was indistinguishable from an
+    inapplicable one.  The unified :func:`get` keeps the forwarding
+    semantics behind an explicit ``strict=False`` and records every drop
+    in the codec's ``hyperparams``."""
+    warnings.warn(
+        "compression.registry.make is deprecated; use "
+        "get(name, strict=False, **overrides)", DeprecationWarning,
+        stacklevel=2)
+    return get(name, strict=False, **overrides)
 
 
 # ---------------------------------------------------------------------------
 # Built-in codecs
 # ---------------------------------------------------------------------------
 
-def _deepcabac_v2(delta: float = 0.01, lam: float = 0.0,
-                  num_gr: int = B.DEFAULT_NUM_GR, min_ndim: int = 2,
-                  chunk_size: int = DEFAULT_CHUNK,
-                  delta_rel: float | None = None) -> Codec:
-    """Paper DC-v2: global-Delta RD grid (eq. 11) + chunk-parallel CABAC.
-
-    ``delta_rel`` switches the grid to the per-tensor relative step
-    Delta = delta_rel * std(w) (overriding ``delta``) so callers with a
-    relative-step config — e.g. CheckpointConfig — keep their semantics."""
+def _rd_grid_quantizer(delta: float, delta_rel: float | None, lam: float,
+                       num_gr: int) -> tuple[RDGridQuantizer, dict]:
+    """The shared RD-grid builder behind every ``deepcabac-*`` intra
+    codec: a global ``delta``, or — when ``delta_rel`` is set — the
+    per-tensor relative step Delta = delta_rel * std(w), so callers with
+    a relative-step config (e.g. CheckpointConfig) keep their semantics.
+    Returns (quantizer, hyperparams)."""
     if delta_rel is not None:
         quantizer = RDGridQuantizer(
             lam=lam, num_gr=num_gr,
             step_for=lambda name, w: relative_step(w, delta_rel))
-        hyperparams = {"delta_rel": delta_rel, "lam": lam, "num_gr": num_gr}
-    else:
-        quantizer = RDGridQuantizer(delta=delta, lam=lam, num_gr=num_gr)
-        hyperparams = {"delta": delta, "lam": lam, "num_gr": num_gr}
+        return quantizer, {"delta_rel": delta_rel, "lam": lam,
+                           "num_gr": num_gr}
+    return (RDGridQuantizer(delta=delta, lam=lam, num_gr=num_gr),
+            {"delta": delta, "lam": lam, "num_gr": num_gr})
+
+
+def _deepcabac_v2(delta: float = 0.01, lam: float = 0.0,
+                  num_gr: int = B.DEFAULT_NUM_GR, min_ndim: int = 2,
+                  chunk_size: int = DEFAULT_CHUNK,
+                  delta_rel: float | None = None) -> Codec:
+    """Paper DC-v2: global-Delta RD grid (eq. 11) + chunk-parallel CABAC."""
+    quantizer, hyperparams = _rd_grid_quantizer(delta, delta_rel, lam, num_gr)
     return Codec("deepcabac-v2",
                  coder=CabacCoder(num_gr=num_gr, chunk_size=chunk_size),
                  quantizer=quantizer,
@@ -87,20 +136,53 @@ def _deepcabac_v3(delta: float = 0.01, lam: float = 0.0,
     per-chunk lane metadata so cold-start decode runs the vectorized
     engine over every chunk at once.  Use this for serving artifacts;
     ``deepcabac-v2`` remains for blobs older readers must accept."""
-    if delta_rel is not None:
-        quantizer = RDGridQuantizer(
-            lam=lam, num_gr=num_gr,
-            step_for=lambda name, w: relative_step(w, delta_rel))
-        hyperparams = {"delta_rel": delta_rel, "lam": lam, "num_gr": num_gr}
-    else:
-        quantizer = RDGridQuantizer(delta=delta, lam=lam, num_gr=num_gr)
-        hyperparams = {"delta": delta, "lam": lam, "num_gr": num_gr}
+    quantizer, hyperparams = _rd_grid_quantizer(delta, delta_rel, lam, num_gr)
     return Codec("deepcabac-v3",
                  coder=CabacV3Coder(num_gr=num_gr, chunk_size=chunk_size,
                                     backend=backend),
                  quantizer=quantizer,
                  policy=ndim_float_policy(min_ndim),
                  hyperparams=hyperparams)
+
+
+def _deepcabac_rd(policy_table=None, num_gr: int = B.DEFAULT_NUM_GR,
+                  min_ndim: int = 2, chunk_size: int = DEFAULT_CHUNK,
+                  backend: str = "auto", assign: str = "auto") -> Codec:
+    """Per-tensor mixed-precision codec driven by a swept
+    :class:`~repro.compression.rd_search.TensorPolicy` table.
+
+    ``policy_table`` (required) is a ``TensorPolicy``, its ``to_dict()``
+    payload, or a path to its JSON file — the output of the
+    rate-distortion Pareto harness (``repro.compression.rd_search`` /
+    ``benchmarks/rd_sweep_bench.py``).  Each covered tensor is
+    RD-assigned on its own (step, lambda) operating point through the
+    ``rd_quant`` kernel dispatch (``assign``: ``auto`` routes to the
+    Pallas kernel on TPU and the numpy oracle elsewhere); tensors the
+    table does not cover stay raw.  Containers are lane-scheduled v3 —
+    byte-compatible with every existing reader."""
+    from .rd_search import PolicyQuantizer, resolve_policy
+    if policy_table is None:
+        raise ValueError(
+            "deepcabac-rd needs policy_table= (a TensorPolicy, its dict "
+            "form, or a JSON path) — sweep one with "
+            "repro.compression.rd_search.rd_sweep or "
+            "benchmarks/rd_sweep_bench.py")
+    table = resolve_policy(policy_table)
+    base_policy = ndim_float_policy(min_ndim)
+
+    def policy(name, w):
+        return table.rule_for(name) is not None and base_policy(name, w)
+
+    return Codec("deepcabac-rd",
+                 coder=CabacV3Coder(num_gr=num_gr, chunk_size=chunk_size,
+                                    backend=backend),
+                 quantizer=PolicyQuantizer(table=table, num_gr=num_gr,
+                                           assign=assign),
+                 policy=policy,
+                 hyperparams={"num_gr": num_gr,
+                              "policy_tensors": len(table.rules),
+                              **({"policy_meta": dict(table.meta)}
+                                 if table.meta else {})})
 
 
 def _ckpt_nearest(delta_rel: float = 1e-3, min_ndim: int = 2,
@@ -182,6 +264,7 @@ def _kv_q8_cabac(step: float = 1.0, num_gr: int = B.DEFAULT_NUM_GR,
 register("deepcabac-v2", _deepcabac_v2)
 register("deepcabac-delta", _deepcabac_delta)
 register("deepcabac-v3", _deepcabac_v3)
+register("deepcabac-rd", _deepcabac_rd)
 register("ckpt-nearest", _ckpt_nearest)
 register("serve-q8", _serve_q8)
 register("huffman", _huffman)

@@ -138,3 +138,25 @@ def build_rate_table(probs: BinProbs, max_level: int) -> RateTable:
 def rate_table_from_levels(levels: np.ndarray, max_level: int,
                            num_gr: int = DEFAULT_NUM_GR) -> RateTable:
     return build_rate_table(estimate_bin_probs(levels, num_gr), max_level)
+
+
+def estimate_level_bits(levels: np.ndarray,
+                        num_gr: int = DEFAULT_NUM_GR) -> float:
+    """Total bits the static-context model assigns to its own assignment.
+
+    Self-entropy of ``levels`` under per-context probabilities estimated
+    from those same levels, with the true per-element prev_sig context —
+    the scan-free rate proxy the RD search uses to score per-tensor
+    operating points without running the sequential coder.  Tracks the
+    actual CABAC stream to within the adaptation overhead (small for the
+    >= thousands-of-values tensors the search touches).
+    """
+    v = np.asarray(levels).astype(np.int64).ravel()
+    if v.size == 0:
+        return 0.0
+    probs = estimate_bin_probs(v, num_gr)
+    sig = v != 0
+    prev = np.concatenate([[False], sig[:-1]])
+    r0 = level_rates(v, probs, 0)
+    r1 = level_rates(v, probs, 1)
+    return float(np.where(prev, r1, r0).sum())

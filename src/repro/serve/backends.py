@@ -79,6 +79,15 @@ class WeightBackend:
     bit-identical to a cold start of the new frame.  It costs one int64
     copy of the quantized model host-side — leave it off for static
     deployments.  See docs/serving_api.md ("Live weight swap").
+
+    ``policy_table`` (a ``TensorPolicy`` / its dict payload / a JSON
+    path — see ``repro.compression.rd_search``) applies a swept
+    per-tensor mixed-precision policy to *pytree* sources at load: each
+    covered tensor is quantized on its table rule and dequantized back,
+    so a pytree-loaded session is numerically identical to one cold-
+    started from the matching ``deepcabac-rd`` container.  Container /
+    manifest sources ignore it (their tensors were already quantized at
+    encode time).
     """
 
     name = "?"
@@ -89,15 +98,40 @@ class WeightBackend:
     q8_resident = False
 
     def __init__(self, decode: DecodeOptions | None = None, mesh=None,
-                 track_levels: bool = False):
+                 track_levels: bool = False, policy_table=None):
         self.decode = decode or DecodeOptions()
         self.mesh = mesh
         self.track_levels = track_levels
+        self.policy_table = policy_table
         self._levels: dict[str, QuantizedTensor] | None = (
             {} if track_levels else None)
 
     def load(self, cfg, source):
         raise NotImplementedError
+
+    def _apply_policy_tree(self, tree):
+        """Quantize-dequantize a pytree source through the backend's
+        ``policy_table`` (no-op without one) — the pytree-load equivalent
+        of serving the ``deepcabac-rd`` container's reconstruction."""
+        if self.policy_table is None:
+            return tree
+        from ..compression.quantizers import is_float_dtype
+        from ..compression.rd_search import PolicyQuantizer, resolve_policy
+        table = resolve_policy(self.policy_table)
+        quant = PolicyQuantizer(table=table)
+
+        def visit(path, leaf):
+            if not hasattr(leaf, "ndim") or not hasattr(leaf, "dtype"):
+                return leaf
+            name = _path_key(path)
+            rule = table.rule_for(name)
+            if (rule is None or rule.kind == "raw" or leaf.size == 0
+                    or not is_float_dtype(leaf.dtype)):
+                return leaf
+            rec = quant.quantize(name, np.asarray(leaf))
+            return jnp.array(np.asarray(rec.dequantize()),
+                             dtype=leaf.dtype, copy=True)
+        return jax.tree_util.tree_map_with_path(visit, tree)
 
     # -- delta ("P-frame") live patching ------------------------------------
 
@@ -423,7 +457,7 @@ class Bf16Backend(WeightBackend):
         if isinstance(source, (bytes, bytearray, memoryview)):
             return _stream_tree(cfg, bytes(source), self._fold,
                                 decode=self.decode)
-        return source
+        return self._apply_policy_tree(source)
 
 
 class Q8Backend(WeightBackend):
@@ -456,7 +490,7 @@ class Q8Backend(WeightBackend):
         if isinstance(source, (bytes, bytearray, memoryview)):
             return _stream_tree(cfg, bytes(source), self._fold,
                                 decode=self.decode)
-        return quantize_tree_q8(source)
+        return quantize_tree_q8(self._apply_policy_tree(source))
 
 
 class ContainerBackend(WeightBackend):

@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..compression.registry import make as _make_codec
+from ..compression.registry import get as _get_codec
 from ..compression.tree import _path_key
 from ..models.transformer import init_cache
 
@@ -155,7 +155,10 @@ class PagedKV:
         self._keys: dict[int, list[str]] = {}        # slot -> prompt keys
         self._index: OrderedDict[str, _SharedPage] = OrderedDict()
 
-        self.codec = _make_codec(codec, step=cfg.kv_cache_delta)
+        # strict=False: ``codec`` is user-chosen (kv_evict_codec) and the
+        # grid-step override only applies to step-taking page codecs
+        self.codec = _get_codec(codec, strict=False,
+                                step=cfg.kv_cache_delta)
         self.store = resolve_kv_store(cold_store)
         # every cold blob (parked private pages, spilled shared pages) is
         # held through the refcounted GC, so a request that goes away

@@ -274,6 +274,10 @@ class ZooConfig:
     cold_priors: dict = field(default_factory=dict)   # model_id -> seconds;
     # seeds the victim scoring before a model's first measured admit
     # (e.g. from BENCH_cold_start-style timings)
+    policy_table: object | None = None   # TensorPolicy / dict / JSON path:
+    # per-tensor mixed-precision policy applied by the weight backend to
+    # pytree admissions (see compression.rd_search); container/manifest
+    # admissions carry their quantization in the artifact itself
 
 
 class ModelZoo:
@@ -356,7 +360,8 @@ class ModelZoo:
         t0 = time.perf_counter()
         warm = self._warm_base(ent)
         backend = get_backend(self.cfg.backend,
-                              track_levels=self.cfg.track_levels)
+                              track_levels=self.cfg.track_levels,
+                              policy_table=self.cfg.policy_table)
         if warm is not None:
             base_id, steps = warm
             base_sess = self._resident[base_id]

@@ -1,0 +1,246 @@
+"""RD Pareto harness + unified registry entry point.
+
+Covers the `repro.compression.rd_search` sweep (lambda-monotone bytes,
+Pareto-front dominance marking, the TensorPolicy artifact's JSON round
+trip), the `deepcabac-rd` codec (bit-exact container round trip under a
+policy table, policy-aware backend loads matching the container
+reconstruction), and the unified `get(name, *, strict=True, **overrides)`
+registry API (typo'd overrides raise; `strict=False` records the drop;
+the deprecated `make` shim stays behaviorally identical across every
+registered codec).
+"""
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import compression
+from repro.compression.rd_search import (RDPoint, RDSearchConfig,
+                                         TensorPolicy, TensorRule,
+                                         pareto_front, rd_assign_levels,
+                                         resolve_policy)
+from repro.core.rate_model import estimate_level_bits
+
+
+# ---------------------------------------------------------------------------
+# The sweep on a smoke config (shared: it is the expensive part)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sweep():
+    import jax
+    from repro import configs
+    from repro.compression.rd_search import rd_sweep
+    from repro.models.transformer import init_params
+
+    cfg = configs.get("llama3-8b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    search = RDSearchConfig(delta_rels=(1e-3, 6e-3), lambdas=(0.0, 1e-5),
+                            prompts=2, prompt_len=8, decode_steps=4,
+                            fim_batches=0)
+    return cfg, params, rd_sweep(cfg, params, search)
+
+
+def test_lambda_monotone_bytes(sweep):
+    """Higher lambda at a fixed grid step never costs more bytes — the
+    rate term only ever pushes levels toward cheaper codes."""
+    _, _, res = sweep
+    by_dr = {}
+    for p in res.points:
+        by_dr.setdefault(p.delta_rel, []).append(p)
+    assert len(by_dr) > 1
+    for dr, pts in by_dr.items():
+        pts = sorted(pts, key=lambda p: p.lam)
+        sizes = [p.bytes for p in pts]
+        assert sizes == sorted(sizes, reverse=True) or all(
+            a >= b for a, b in zip(sizes, sizes[1:])), (
+            f"bytes not non-increasing in lambda at delta_rel={dr}: {sizes}")
+
+
+def test_pareto_front_marking(sweep):
+    _, _, res = sweep
+    front = [p for p in res.points if p.on_front]
+    assert front, "empty Pareto front"
+    for p in front:
+        assert not any(
+            q is not p and q.bytes <= p.bytes
+            and (q.token_err, q.logit_kl) <= (p.token_err, p.logit_kl)
+            and (q.bytes < p.bytes
+                 or (q.token_err, q.logit_kl) < (p.token_err, p.logit_kl))
+            for q in res.points), "dominated point marked on_front"
+    assert res.winner.on_front
+
+
+def test_pareto_front_function():
+    pts = [RDPoint(1e-3, 0.0, 100, 0.0, 1.0),
+           RDPoint(1e-3, 1e-4, 80, 0.0, 2.0),
+           RDPoint(6e-3, 0.0, 90, 0.0, 3.0),   # dominated by the 80-byte pt
+           RDPoint(6e-3, 1e-4, 80, 0.5, 0.5)]  # dominated too: token_err is
+    front = pareto_front(pts)                  # the primary distortion key
+    assert [p.bytes for p in front] == [80, 100]
+    assert not pts[2].on_front and not pts[3].on_front
+    assert pts[0].on_front and pts[1].on_front
+
+
+def test_policy_json_roundtrip(tmp_path, sweep):
+    _, _, res = sweep
+    path = tmp_path / "policy.json"
+    res.policy.save(path)
+    loaded = TensorPolicy.load(path)
+    assert loaded.rules == res.policy.rules
+    assert loaded.meta == res.policy.meta
+    # the dict payload round-trips through plain json too
+    again = resolve_policy(json.loads(json.dumps(res.policy.to_dict())))
+    assert again.rules == res.policy.rules
+
+
+def test_policy_rejects_foreign_payloads():
+    with pytest.raises(ValueError):
+        TensorPolicy.from_dict({"rules": {}})          # no format tag
+    with pytest.raises(ValueError):
+        TensorRule(step=0.1, kind="float4")            # unknown kind
+    with pytest.raises(TypeError):
+        resolve_policy(42)
+
+
+def test_rd_container_roundtrip_bit_exact(sweep):
+    """Same policy table -> byte-identical containers, and the decoded
+    levels match the encoder's quantized entries exactly."""
+    cfg, params, res = sweep
+    codec = compression.get("deepcabac-rd", policy_table=res.policy)
+    art1 = codec.compress(params)
+    art2 = compression.get("deepcabac-rd",
+                           policy_table=res.policy.to_dict()).compress(params)
+    assert art1.blob == art2.blob
+    assert len(art1.blob) == res.policy_bytes
+
+    dec = compression.decompress(art1.blob, dequantize=False)
+    for name, e in art1.quantized.items():
+        if isinstance(e, np.ndarray):
+            np.testing.assert_array_equal(np.asarray(dec[name]), e,
+                                          err_msg=name)
+        else:
+            assert dec[name].step == e.step, name
+            np.testing.assert_array_equal(dec[name].levels, e.levels,
+                                          err_msg=name)
+
+
+def test_policy_backend_matches_container(sweep):
+    """A pytree load through a policy-aware backend equals the
+    deepcabac-rd container's reconstruction leaf for leaf."""
+    from repro.serve.backends import get_backend
+
+    cfg, params, res = sweep
+    art = compression.get("deepcabac-rd",
+                          policy_table=res.policy).compress(params)
+    from_blob = compression.decompress(art.blob, like=params)
+    from_tree = get_backend("bf16", policy_table=res.policy).load(cfg, params)
+    flat_blob = compression.flatten_tree(from_blob)
+    flat_tree = compression.flatten_tree(from_tree)
+    assert set(flat_blob) == set(flat_tree)
+    for name in flat_blob:
+        np.testing.assert_array_equal(np.asarray(flat_blob[name]),
+                                      np.asarray(flat_tree[name]),
+                                      err_msg=name)
+
+
+def test_refinement_respects_budget(sweep):
+    _, _, res = sweep
+    assert res.policy_token_err <= max(res.winner.token_err, 0.0)
+    if res.refined_tensors and not res.reverted:
+        assert res.policy_bytes <= res.winner.bytes
+
+
+# ---------------------------------------------------------------------------
+# rd_assign_levels + rate proxy (no sweep needed)
+# ---------------------------------------------------------------------------
+
+def test_rd_assign_levels_matches_oracle():
+    from repro.core.deepcabac import quantize_tensor_rd
+    rng = np.random.default_rng(0)
+    w = (rng.standard_normal((64, 32)) * 0.1).astype(np.float32)
+    for lam in (0.0, 1e-4):
+        got = rd_assign_levels(w, 0.01, lam, assign="host")
+        ref = quantize_tensor_rd(w, 0.01, lam)
+        np.testing.assert_array_equal(got, ref.levels)
+
+
+def test_estimate_level_bits_orders_rates():
+    rng = np.random.default_rng(1)
+    fine = np.rint(rng.standard_normal(4096) * 40).astype(np.int64)
+    coarse = np.rint(rng.standard_normal(4096) * 4).astype(np.int64)
+    assert estimate_level_bits(fine) > estimate_level_bits(coarse) > 0
+    assert estimate_level_bits(np.zeros(0, np.int64)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Unified registry entry point (the api_redesign satellite + bugfix)
+# ---------------------------------------------------------------------------
+
+def _tiny_tree():
+    rng = np.random.default_rng(2)
+    return {"w": (rng.standard_normal((16, 16)) * 0.1).astype(np.float32)}
+
+
+def test_get_rejects_typoed_override():
+    """The historical silent-drop bug: `lamda` must raise, not vanish."""
+    with pytest.raises(TypeError, match="lamda"):
+        compression.get("deepcabac-v3", lamda=0.1)
+    with pytest.raises(TypeError, match="strict=False"):
+        compression.get("ckpt-nearest", delta_rell=1e-3)
+
+
+def test_nonstrict_get_records_drop():
+    codec = compression.get("deepcabac-v3", strict=False, lamda=0.1,
+                            delta_rel=2e-3)
+    assert codec.hyperparams["dropped_overrides"] == ["lamda"]
+    assert codec.hyperparams["delta_rel"] == 2e-3
+    # the drop survives into the artifact a save would write
+    art = codec.compress(_tiny_tree())
+    assert art.hyperparams["dropped_overrides"] == ["lamda"]
+
+
+def test_strict_get_keeps_hyperparams_clean():
+    codec = compression.get("deepcabac-v3", delta_rel=2e-3)
+    assert "dropped_overrides" not in codec.hyperparams
+
+
+def test_deepcabac_rd_requires_policy_table():
+    with pytest.raises(ValueError, match="policy_table"):
+        compression.get("deepcabac-rd")
+
+
+def test_make_shim_parity_every_codec():
+    """`make(name, **kw)` stays behaviorally identical to
+    `get(name, strict=False, **kw)` for every registered codec — same
+    type, same hyperparams (dropped-override log included) — and warns."""
+    probe = {"delta_rel": 2e-3, "bogus_override": 1}
+    for name in compression.available():
+        if name == "deepcabac-rd":
+            # requires policy_table; parity is raising the same error
+            with pytest.raises(ValueError):
+                compression.get(name, strict=False)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                with pytest.raises(ValueError):
+                    compression.make(name)
+            continue
+        via_get = compression.get(name, strict=False, **probe)
+        with pytest.warns(DeprecationWarning):
+            via_make = compression.make(name, **probe)
+        assert type(via_make) is type(via_get), name
+        if hasattr(via_get, "hyperparams"):
+            assert via_make.hyperparams == via_get.hyperparams, name
+
+
+def test_checkpoint_manager_records_drop(tmp_path):
+    """The manager's generic-config forwarding logs inapplicable knobs
+    instead of silently eating them."""
+    from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path),
+                                             codec="serve-q8"))
+    codec = mgr._codec()
+    assert codec.hyperparams["dropped_overrides"] == ["delta_rel",
+                                                      "min_ndim"]
